@@ -1,0 +1,54 @@
+"""Paper Fig. 9: the LMUL sweep, adapted to TPU block geometry.
+
+RVV's LMUL multiplies the effective vector width; the TPU analog is the
+kernel's block/tile widths.  Two sweeps:
+  (a) strip width V of the fused im2col+pack (data-movement efficiency vs
+      boundary handling — exactly the paper's trade-off), and
+  (b) pruning-tile width T of the column-wise sparse GEMM (accumulator
+      footprint vs gather amortization).
+Host wall-clock; the analytic VMEM footprint of the Pallas kernel per
+(block_b, block_k, T) is reported alongside (the register-pressure analog).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.timing import row, time_fn
+from repro.core import SparsityConfig, colwise_nm_mask, meta_for, pack_colwise
+from repro.kernels.colwise_nm.kernel import vmem_bytes
+from repro.kernels.im2col_pack.ref import im2col_pack_ref
+
+
+def run(iters: int = 10):
+    out = []
+    # (a) strip width sweep on a ResNet stage-2 3x3 layer
+    c, h, k = 128, 28, 3
+    x = jax.random.normal(jax.random.PRNGKey(0), (c, 1, h, h))
+    for v in [64, 128, 256, 512, 1024]:
+        f = jax.jit(lambda x, v=v: im2col_pack_ref(x, k, k, 1, 1, v))
+        t = time_fn(f, x, iters=iters)
+        out.append(row(f"fig9.pack.V{v}", t, "strip-width (LMUL analog)"))
+
+    # (b) tile width sweep on a transformer FFN GEMM (4096 tokens)
+    d_in, d_out, tokens, s = 2048, 2048, 4096, 0.5
+    xt = jax.random.normal(jax.random.PRNGKey(1), (tokens, d_in))
+    w = jax.random.normal(jax.random.PRNGKey(2), (d_in, d_out)) / 45.0
+    for tile in [32, 128, 512, 2048]:
+        cfg = SparsityConfig(s, m=None, tile=tile, format="compressed_xla")
+        meta = meta_for(d_in, d_out, cfg)
+        mask = colwise_nm_mask(w, s, tile=meta.tile)
+        values, idx = pack_colwise(w, mask, meta)
+
+        def f(x, values=values, idx=idx):
+            xg = jnp.take(x, idx, axis=-1)
+            return jnp.einsum("ptk,tkf->ptf", xg, values)
+
+        t = time_fn(jax.jit(f), xt, iters=iters)
+        vm = vmem_bytes(block_b=128, block_k=128, d_in=d_in, tile=min(tile, 512))
+        out.append(row(f"fig9.gemm.T{tile}", t, f"pallas_vmem_per_step={vm}B"))
+    return out
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,0 +1,63 @@
+"""Paper Table 2 / Fig. 11: end-to-end throughput across sparsity levels and
+batch sizes (host CPU, reduced config — the production numbers come from the
+roofline artifacts).
+
+Decode tokens/s via the serving engine and train-step wall time, for dense vs
+column-wise compressed at 25/50/75% sparsity, batch sizes 1/2/4.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.timing import row, time_fn
+from repro.configs import smoke_config
+from repro.core.pruning import SparsityConfig
+from repro.models import registry as reg
+from repro.serve import Engine, ServeConfig
+
+
+def _cfg(sparsity: float):
+    scfg = SparsityConfig(
+        sparsity=sparsity, m=None, tile=64,
+        format="compressed_xla" if sparsity > 0 else "dense", min_dim=64,
+    )
+    return smoke_config("qwen2-7b").with_(
+        n_layers=4, d_model=256, n_heads=4, n_kv_heads=2, head_dim=64,
+        d_ff=1024, vocab_size=512, sparsity=scfg,
+    )
+
+
+def run(new_tokens: int = 16):
+    out = []
+    for sparsity in (0.0, 0.25, 0.5, 0.75):
+        cfg = _cfg(sparsity)
+        params, _ = reg.init_params(cfg, jax.random.PRNGKey(0))
+        tag = f"s{int(sparsity*100)}"
+        for b in (1, 2, 4):
+            eng = Engine(cfg, params, ServeConfig(max_new_tokens=new_tokens))
+            prompts = np.ones((b, 8), np.int32)
+            eng.generate(prompts)  # warm
+            res = eng.generate(prompts)
+            out.append(
+                row(f"table2.decode.{tag}.b{b}",
+                    1e6 * res["decode_s"] / max(new_tokens - 1, 1),
+                    f"tok_s={res['decode_tok_s']:.1f}")
+            )
+        # train step (fig 11 analog)
+        lfn = reg.loss_fn(cfg)
+
+        @jax.jit
+        def tstep(p, batch):
+            (l, _), g = jax.value_and_grad(lfn, has_aux=True, allow_int=True)(p, batch)
+            return l
+
+        batch = {"tokens": jnp.ones((4, 128), jnp.int32)}
+        t = time_fn(tstep, params, batch, iters=5)
+        out.append(row(f"fig11.train.{tag}", t, "fwd+bwd b=4 s=128"))
+    return out
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,0 +1,65 @@
+"""Paper Fig. 6/7/8: fused im2col+packing vs the two-pass baseline.
+
+Wall time (Fig. 6 analog), analytic bytes moved (Fig. 7's L1-loads analog;
+no hardware counters in a dry-run container), and the Fig. 8 breakdown
+(im2col only / unfused / fused).
+"""
+from __future__ import annotations
+
+import jax
+
+from benchmarks.timing import row, time_fn
+from repro.kernels.im2col_pack.ops import (
+    bytes_moved_fused,
+    bytes_moved_unfused,
+    im2col_only,
+    im2col_then_pack,
+)
+from repro.kernels.im2col_pack.ref import im2col_pack_ref, out_size
+
+# 7x7-stem + the 3x3 layers of each ResNet-50 stage (the layers the paper
+# evaluates — largest im2col overhead).  Batch 4 keeps the working set out of
+# the LLC so the data-movement difference is visible in wall time (the bytes
+# model — the L1-loads analog — is reported regardless).
+LAYERS = [
+    ("stem7x7", 3, 224, 7, 2),
+    ("s1.3x3", 64, 56, 3, 1),
+    ("s2.3x3", 128, 28, 3, 1),
+    ("s3.3x3", 256, 14, 3, 1),
+    ("s4.3x3", 512, 7, 3, 1),
+]
+BATCH = 4
+
+
+def run(iters: int = 10, v: int = 128):
+    out = []
+    for name, c, h, k, stride in LAYERS:
+        pad = k // 2 if k > 1 else 0
+        x = jax.random.normal(jax.random.PRNGKey(0), (c, BATCH, h, h))
+        ho = out_size(h, k, stride, pad)
+
+        fused = jax.jit(
+            lambda x, k=k, stride=stride, pad=pad: im2col_pack_ref(x, k, k, stride, pad, v)
+        )
+        t_fused = time_fn(fused, x, iters=iters)
+        t_unfused = time_fn(
+            lambda x: im2col_then_pack(x, kh=k, kw=k, stride=stride, pad=pad, v=v),
+            x, iters=iters,
+        )
+        t_im2col = time_fn(
+            lambda x: im2col_only(x, kh=k, kw=k, stride=stride, pad=pad), x, iters=iters
+        )
+        bf = bytes_moved_fused(c, BATCH, h, h, k, k, ho, ho, v, 4)
+        bu = bytes_moved_unfused(c, BATCH, h, h, k, k, ho, ho, v, 4)
+        out.append(row(f"fig6.{name}.fused", t_fused, f"speedup={t_unfused/t_fused:.2f}x"))
+        out.append(row(f"fig6.{name}.unfused", t_unfused, ""))
+        out.append(row(f"fig8.{name}.im2col_only", t_im2col, ""))
+        out.append(
+            row(f"fig7.{name}.bytes", 0.0,
+                f"fused={bf} unfused={bu} reduction={100*(1-bf/bu):.0f}%")
+        )
+    return out
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,0 +1,42 @@
+"""Paper Fig. 12 / §5: CNHW vs NHWC layout for the im2col data path.
+
+CNHW keeps W contiguous so strips move with long contiguous reads (the
+paper's layout choice); NHWC interleaves channels, so forming the same
+(k,c)-major patch matrix strides across memory.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.timing import row, time_fn
+from repro.kernels.im2col_pack.ref import im2col_pack_ref
+
+
+def im2col_pack_nhwc(x_nhwc, kh, kw, stride, pad, v):
+    """Same output as the CNHW path, starting from an NHWC feature map."""
+    x = jnp.transpose(x_nhwc, (3, 0, 1, 2))  # materialized transpose = the cost
+    return im2col_pack_ref(x, kh, kw, stride, pad, v)
+
+
+def run(iters: int = 10):
+    out = []
+    for name, c, h, k, stride, bsz in [
+        ("s1.3x3.b1", 64, 56, 3, 1, 1),
+        ("s2.3x3.b1", 128, 28, 3, 1, 1),
+        ("s2.3x3.b4", 128, 28, 3, 1, 4),
+    ]:
+        pad = 1
+        x_cnhw = jax.random.normal(jax.random.PRNGKey(0), (c, bsz, h, h))
+        x_nhwc = jnp.transpose(x_cnhw, (1, 2, 3, 0))
+        f_c = jax.jit(lambda x, k=k, s=stride, p=pad: im2col_pack_ref(x, k, k, s, p, 128))
+        f_n = jax.jit(lambda x, k=k, s=stride, p=pad: im2col_pack_nhwc(x, k, k, s, p, 128))
+        t_c = time_fn(f_c, x_cnhw, iters=iters)
+        t_n = time_fn(f_n, x_nhwc, iters=iters)
+        out.append(row(f"fig12.{name}.cnhw", t_c, f"speedup={t_n/t_c:.2f}x"))
+        out.append(row(f"fig12.{name}.nhwc", t_n, ""))
+    return out
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,0 +1,35 @@
+"""Roofline summary (assignment deliverable g): per (arch × shape × mesh)
+terms from the dry-run artifacts as CSV rows."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from benchmarks.timing import row
+
+
+def run(art_dir: str = "artifacts/dryrun"):
+    try:
+        from benchmarks.report import load
+    except Exception:
+        return [row("roofline.unavailable", 0.0, "run repro.launch.dryrun first")]
+    out = []
+    for mesh, sp in [("pod16x16", 50), ("pod16x16", 0), ("pod2x16x16", 50)]:
+        for (arch, shape), rec in sorted(load(mesh, sp).items()):
+            if "roofline" not in rec:
+                continue
+            r = rec["roofline"]
+            out.append(
+                row(
+                    f"roofline.{mesh}.s{sp}.{arch}.{shape}",
+                    1e6 * max(r["t_compute_s"], r["t_memory_s"], r["t_collective_s"]),
+                    f"bottleneck={r['bottleneck']} frac={r['roofline_fraction']:.4f} "
+                    f"tc={r['t_compute_s']:.4g} tm={r['t_memory_s']:.4g} "
+                    f"tcoll={r['t_collective_s']:.4g}",
+                )
+            )
+    return out
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,0 +1,54 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  Mapping to the paper:
+  bench_conv_layers  -> Fig. 5 (+ Fig. 10): dense vs conventional N:M vs
+                        column-wise N:M per conv layer
+  bench_fusion       -> Fig. 6/7/8: fused im2col+packing
+  bench_blockwidth   -> Fig. 9: LMUL sweep (strip/tile width analogs)
+  bench_accuracy     -> Table 1: pruning-pattern accuracy (proxy task)
+  bench_e2e          -> Table 2 / Fig. 11: end-to-end throughput vs sparsity
+  bench_layout       -> Fig. 12: CNHW vs NHWC
+  bench_roofline     -> assignment §Roofline from the dry-run artifacts
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (
+        bench_accuracy,
+        bench_blockwidth,
+        bench_conv_layers,
+        bench_e2e,
+        bench_fusion,
+        bench_layout,
+        bench_roofline,
+    )
+
+    print("name,us_per_call,derived")
+    modules = [
+        ("fig5_conv_layers", bench_conv_layers),
+        ("fig6_8_fusion", bench_fusion),
+        ("fig9_blockwidth", bench_blockwidth),
+        ("table1_accuracy", bench_accuracy),
+        ("table2_fig11_e2e", bench_e2e),
+        ("fig12_layout", bench_layout),
+        ("roofline", bench_roofline),
+    ]
+    failures = 0
+    for name, mod in modules:
+        try:
+            for line in mod.run():
+                print(line)
+            sys.stdout.flush()
+        except Exception:  # noqa: BLE001
+            failures += 1
+            print(f"{name}.ERROR,0.0,{traceback.format_exc(limit=1).splitlines()[-1]}")
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

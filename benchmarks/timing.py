@@ -1,0 +1,26 @@
+"""Wall-clock timing helper for the benchmark harness."""
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import jax
+
+
+def time_fn(fn: Callable, *args, iters: int = 20, warmup: int = 3) -> float:
+    """Median wall time per call in microseconds (blocks on device results)."""
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2] * 1e6
+
+
+def row(name: str, us: float, derived: str = "") -> str:
+    return f"{name},{us:.1f},{derived}"

@@ -1,0 +1,116 @@
+"""The paper's full workflow on a small LM (CPU):
+
+  1. train dense
+  2. one-shot column-wise N:M prune (L1 importance, adaptive M)  [paper §3.1]
+  3. finetune with the mask fixed                                 [paper §4.1.2]
+  4. compress to the packed format and verify the compressed
+     forward matches the masked model exactly                     [paper Fig. 1]
+  5. compare against the conventional row-wise N:M baseline
+
+    PYTHONPATH=src python examples/prune_and_finetune.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import smoke_config
+from repro.core import SparsityConfig, compress_layer, prune_tree
+from repro.data import DataConfig, SyntheticLM
+from repro.models import registry as reg
+from repro.optim import AdamWConfig, adamw_init, adamw_update
+
+SPARSITY = 0.5
+
+
+def train(cfg, params, data, steps, lr, masks=None, start=0):
+    lfn = reg.loss_fn(cfg)
+    opt = adamw_init(params)
+    ocfg = AdamWConfig(lr=lr, weight_decay=0.01)
+
+    @jax.jit
+    def step(p, o, batch):
+        (l, _), g = jax.value_and_grad(lfn, has_aux=True)(p, batch)
+        p, o, _ = adamw_update(p, g, o, ocfg)
+        if masks is not None:
+            p = jax.tree_util.tree_map(
+                lambda w, m: w * m.astype(w.dtype) if m is not None else w,
+                p, masks, is_leaf=lambda x: x is None)
+        return p, o, l
+
+    loss = None
+    for k in range(steps):
+        batch = {kk: jnp.asarray(v) for kk, v in data.batch_at(start + k).items()}
+        params, opt, loss = step(params, opt, batch)
+    return params, float(loss)
+
+
+def evaluate(cfg, params, data, n=6):
+    lfn = jax.jit(lambda p, b: reg.loss_fn(cfg)(p, b)[0])
+    return float(np.mean([
+        float(lfn(params, {k: jnp.asarray(v) for k, v in data.batch_at(50000 + i).items()}))
+        for i in range(n)
+    ]))
+
+
+def main():
+    cfg = smoke_config("smollm-360m").with_(
+        n_layers=2, d_model=128, n_heads=4, n_kv_heads=2, head_dim=32,
+        d_ff=256, vocab_size=128, tie_embeddings=False)
+    data = SyntheticLM(DataConfig(vocab_size=128, batch=16, seq_len=48, seed=5))
+    params, _ = reg.init_params(cfg, jax.random.PRNGKey(0))
+
+    print("1) dense training …")
+    params, _ = train(cfg, params, data, 120, 3e-3)
+    dense_nll = evaluate(cfg, params, data)
+    print(f"   dense eval nll = {dense_nll:.4f}")
+
+    not_embed = lambda path, leaf: "embed" not in jax.tree_util.keystr(path)
+    results = {}
+    for name, kw in {
+        "colwise adaptive-M (paper)": dict(m=None, tile=8, scheme="colwise"),
+        "rowwise 2:4 baseline": dict(m=4, tile=1, scheme="rowwise"),
+    }.items():
+        scfg = SparsityConfig(sparsity=SPARSITY, format="masked", min_dim=64, **kw)
+        pruned, masks = prune_tree(params, scfg, is_weight=not_embed)
+        one_shot = evaluate(cfg, pruned, data)
+        tuned, _ = train(cfg, pruned, data, 60, 1e-3, masks=masks, start=200)
+        ft = evaluate(cfg, tuned, data)
+        results[name] = (one_shot, ft, tuned, masks)
+        print(f"2-3) {name}: one-shot {one_shot:.4f} -> finetuned {ft:.4f}")
+
+    # 4) compress the colwise model and verify exact forward equality
+    name = "colwise adaptive-M (paper)"
+    _, _, tuned, masks = results[name]
+    scfg = SparsityConfig(sparsity=SPARSITY, m=None, tile=8, format="compressed_xla",
+                          min_dim=64)
+    lfn = reg.loss_fn(cfg)
+    batch = {k: jnp.asarray(v) for k, v in data.batch_at(0).items()}
+    masked_loss = float(lfn(tuned, batch)[0])
+
+    def compress_inplace(tree, masks):
+        if isinstance(tree, dict) and "w" in tree and masks is not None and \
+           isinstance(masks, dict) and masks.get("w") is not None:
+            comp = compress_layer({"w": tree["w"], "mask": masks["w"],
+                                   **({"b": tree["b"]} if "b" in tree else {})}, scfg)
+            return comp
+        if isinstance(tree, dict):
+            return {k: compress_inplace(v, masks.get(k) if isinstance(masks, dict) else None)
+                    for k, v in tree.items()}
+        return tree
+
+    comp_params = compress_inplace(tuned, masks)
+    comp_loss = float(lfn(comp_params, batch)[0])
+    print(f"4) compressed forward loss {comp_loss:.6f} vs masked {masked_loss:.6f} "
+          f"(delta {abs(comp_loss-masked_loss):.2e})")
+    kept = sum(np.asarray(l).size for p, l in
+               jax.tree_util.tree_flatten_with_path(comp_params)[0]
+               if "values" in jax.tree_util.keystr(p))
+    total = sum(np.asarray(l).size for p, l in
+                jax.tree_util.tree_flatten_with_path(tuned)[0]
+                if jax.tree_util.keystr(p).endswith("['w']"))
+    print(f"   stored body weights: {kept} vs dense {total} "
+          f"({100*kept/max(total,1):.0f}%)")
+
+
+if __name__ == "__main__":
+    main()

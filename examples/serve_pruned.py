@@ -1,0 +1,50 @@
+"""Serve a column-wise-pruned model with batched requests (CPU demo).
+
+    PYTHONPATH=src python examples/serve_pruned.py
+
+Compares decode throughput dense vs 50%/75% compressed on the same reduced
+qwen2-style config — the FLOP saving the MXU would realize shows up as a
+wall-clock saving on the host too, because the compressed contraction is
+genuinely shorter.
+"""
+import numpy as np
+import jax
+
+from repro.configs import smoke_config
+from repro.core.pruning import SparsityConfig
+from repro.models import registry as reg
+from repro.serve import Engine, ServeConfig
+
+
+def build(sparsity: float):
+    scfg = SparsityConfig(
+        sparsity=sparsity, m=None, tile=None,  # tile = full shard (tuner's pick for the XLA path)
+        format="compressed_xla" if sparsity else "dense", min_dim=64)
+    cfg = smoke_config("qwen2-7b").with_(
+        n_layers=4, d_model=512, n_heads=4, n_kv_heads=2, head_dim=128,
+        d_ff=4096, vocab_size=512, sparsity=scfg)
+    params, _ = reg.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def main():
+    prompts = np.random.default_rng(0).integers(0, 500, (32, 16)).astype(np.int32)
+    base = None
+    for s in (0.0, 0.5, 0.75):
+        cfg, params = build(s)
+        eng = Engine(cfg, params, ServeConfig(max_new_tokens=24))
+        eng.generate(prompts)  # warm/compile
+        res = eng.generate(prompts)
+        if base is None:
+            base = res["decode_tok_s"]
+        print(f"sparsity {int(s*100):>2}%  prefill {res['prefill_s']*1e3:7.1f} ms  "
+              f"decode {res['decode_tok_s']:8.1f} tok/s  "
+              f"speedup x{res['decode_tok_s']/base:.2f}")
+        print(f"   sample: {res['tokens'][0][:12].tolist()}")
+    print("\nnote: XLA:CPU pays a hefty scalar-gather penalty that RVV indexed "
+          "loads (paper) and the TPU VMEM gather (our Pallas kernel) do not - "
+          "the FLOP saving shows through fully at 75%, partially at 50% here.")
+
+
+if __name__ == "__main__":
+    main()

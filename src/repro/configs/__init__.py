@@ -1,0 +1,69 @@
+"""Config registry: the 10 assigned architectures + reduced smoke variants."""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.configs.base import (  # noqa: F401
+    LONG_CONTEXT_ARCHS,
+    SHAPES,
+    ModelConfig,
+    ShapeCell,
+)
+
+_MODULES = {
+    "olmoe-1b-7b": "repro.configs.olmoe_1b_7b",
+    "moonshot-v1-16b-a3b": "repro.configs.moonshot_v1_16b_a3b",
+    "smollm-360m": "repro.configs.smollm_360m",
+    "qwen2-0.5b": "repro.configs.qwen2_0_5b",
+    "qwen2-7b": "repro.configs.qwen2_7b",
+    "nemotron-4-15b": "repro.configs.nemotron_4_15b",
+    "xlstm-350m": "repro.configs.xlstm_350m",
+    "qwen2-vl-72b": "repro.configs.qwen2_vl_72b",
+    "whisper-small": "repro.configs.whisper_small",
+    "zamba2-7b": "repro.configs.zamba2_7b",
+}
+
+
+def list_archs() -> List[str]:
+    return list(_MODULES)
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in _MODULES:
+        raise KeyError(f"unknown arch {name!r}; known: {list(_MODULES)}")
+    return importlib.import_module(_MODULES[name]).CONFIG
+
+
+def smoke_config(name: str) -> ModelConfig:
+    """Reduced same-family config for CPU smoke tests: small widths, few
+    layers/experts, tiny vocab — every family quirk preserved."""
+    cfg = get_config(name)
+    kv = max(1, min(cfg.n_kv_heads, 2))
+    over = dict(
+        n_layers=2,
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=kv,
+        d_ff=96 if cfg.d_ff else 0,
+        vocab_size=503,  # deliberately not a multiple of 128 (tests padding)
+        head_dim=16,
+        max_seq_len=64,
+        dtype="float32",
+        param_dtype="float32",
+        remat=False,
+    )
+    if cfg.mrope:
+        over["mrope_sections"] = (2, 3, 3)  # sums to head_dim/2 = 8
+        over["vision_patches"] = 4
+    if cfg.is_moe:
+        over.update(n_experts=4, top_k=2)
+    if cfg.block_pattern == "xlstm":
+        over.update(n_layers=4, slstm_every=2, n_heads=2, n_kv_heads=2,
+                    ssm_chunk=8, expand=2)
+    if cfg.block_pattern == "mamba_shared_attn":
+        over.update(n_layers=5, shared_attn_every=2, ssm_head_dim=16,
+                    ssm_state=8, ssm_chunk=8, n_heads=4, n_kv_heads=kv)
+    if cfg.is_encoder_decoder:
+        over.update(encoder_layers=2, encoder_seq=24)
+    return cfg.with_(**over)

@@ -1,0 +1,154 @@
+"""Architecture + run configuration dataclasses for the model zoo."""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Tuple
+
+from repro.core.pruning import DENSE, SparsityConfig
+
+
+def pad_to_multiple(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str = "model"
+    family: str = "dense"  # dense | moe | ssm | vlm | audio | hybrid
+    n_layers: int = 2
+    d_model: int = 128
+    n_heads: int = 2
+    n_kv_heads: int = 2
+    d_ff: int = 256
+    vocab_size: int = 256
+    head_dim: Optional[int] = None
+    qkv_bias: bool = False
+    attn_impl: str = "naive"               # naive | chunked | pallas (flash kernel)
+    attn_chunk: int = 512
+    use_rope: bool = True                  # whisper uses absolute sinusoidal positions
+    rope_theta: float = 1e4
+    mrope: bool = False                    # Qwen2-VL M-RoPE
+    mrope_sections: Tuple[int, ...] = (16, 24, 24)
+    mlp_act: str = "swiglu"                # swiglu | sq_relu | gelu
+    norm: str = "rmsnorm"                  # rmsnorm | layernorm
+    tie_embeddings: bool = False
+    # --- MoE ---
+    n_experts: int = 0
+    top_k: int = 0
+    capacity_factor: float = 1.25
+    moe_impl: str = "auto"                 # auto (GSPMD) | shard_map (manual EP)
+    # --- SSM / recurrent ---
+    block_pattern: str = "attn"            # attn | xlstm | mamba_shared_attn
+    ssm_state: int = 0
+    d_conv: int = 4
+    expand: int = 2
+    ssm_head_dim: int = 64
+    ssm_chunk: int = 128
+    slstm_every: int = 8                   # xlstm: every k-th block is sLSTM
+    shared_attn_every: int = 6             # zamba2: shared attn after every k mamba blocks
+    # --- encoder-decoder (whisper) ---
+    is_encoder_decoder: bool = False
+    encoder_layers: int = 0
+    encoder_seq: int = 1500                # frames after the (stubbed) conv frontend
+    # --- VLM stub ---
+    vision_patches: int = 256              # patch embeddings supplied by input_specs
+    # --- the paper's technique ---
+    sparsity: SparsityConfig = DENSE
+    # --- numerics / runtime ---
+    dtype: str = "float32"                 # activation/compute dtype
+    param_dtype: str = "float32"
+    remat: bool = False
+    remat_policy: str = "nothing"          # nothing | dots (save matmul outputs)
+    max_seq_len: int = 8192
+    tp: int = 1                            # tensor-parallel degree (for head padding)
+    dp: int = 1                            # data-parallel degree (MoE dispatch groups)
+    source: str = ""                       # provenance note
+
+    # ------------------------------------------------------------------
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or (self.d_model // self.n_heads)
+
+    @property
+    def padded_heads(self) -> int:
+        """q heads padded up to a multiple of tp (zero-init; exact numerics)."""
+        return pad_to_multiple(self.n_heads, self.tp)
+
+    @property
+    def padded_vocab(self) -> int:
+        """vocab padded to a multiple of 128 for clean TP sharding; logits for
+        padded ids are masked at the loss/sampling layer."""
+        return pad_to_multiple(self.vocab_size, 128)
+
+    @property
+    def is_moe(self) -> bool:
+        return self.n_experts > 0
+
+    def with_(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+    # ------------------------------------------------------------------
+    def param_count(self) -> int:
+        """Approximate parameter count N (total, incl. all experts)."""
+        d, f, v = self.d_model, self.d_ff, self.padded_vocab
+        hd = self.resolved_head_dim
+        h, kv = self.padded_heads, self.n_kv_heads
+        attn = d * hd * (h + 2 * kv) + h * hd * d
+        if self.mlp_act == "swiglu":
+            mlp = 3 * d * f
+        else:
+            mlp = 2 * d * f
+        if self.is_moe:
+            mlp = mlp * self.n_experts + d * self.n_experts  # + router
+        if self.block_pattern == "xlstm":
+            di = self.expand * d
+            blk = d * 2 * di + 3 * di * di // 4 + di * d  # rough xlstm cell
+            core = self.n_layers * blk
+        elif self.block_pattern == "mamba_shared_attn":
+            di = self.expand * d
+            nh = di // self.ssm_head_dim
+            mamba = d * (2 * di + 2 * self.ssm_state + nh) + di * d
+            n_shared = self.n_layers // self.shared_attn_every
+            core = self.n_layers * mamba + (attn + mlp) + n_shared * 0  # shared params once
+        else:
+            core = self.n_layers * (attn + mlp)
+        emb = v * d * (1 if self.tie_embeddings else 2)
+        if self.is_encoder_decoder:
+            core += self.encoder_layers * (attn + mlp) + self.n_layers * attn  # cross attn
+        return core + emb
+
+    def active_param_count(self) -> int:
+        """Active params per token (MoE: only top_k experts count)."""
+        if not self.is_moe:
+            return self.param_count()
+        d, f = self.d_model, self.d_ff
+        per_expert = (3 if self.mlp_act == "swiglu" else 2) * d * f
+        total = self.param_count()
+        return total - (self.n_experts - self.top_k) * per_expert * self.n_layers
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    """One (input-shape) cell of the assignment grid."""
+
+    name: str            # train_4k | prefill_32k | decode_32k | long_500k
+    seq_len: int
+    global_batch: int
+    kind: str            # train | prefill | decode
+
+    @property
+    def is_serve(self) -> bool:
+        return self.kind in ("prefill", "decode")
+
+
+SHAPES = {
+    "train_4k": ShapeCell("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeCell("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeCell("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeCell("long_500k", 524288, 1, "decode"),
+}
+
+# Pure full-attention archs skip long_500k (sub-quadratic attention required);
+# SSM/hybrid archs run it. Recorded in DESIGN.md §6.
+LONG_CONTEXT_ARCHS = {"xlstm-350m", "zamba2-7b"}

@@ -1,0 +1,18 @@
+"""SmolLM-360M: llama-arch small dense LM. [hf:HuggingFaceTB/SmolLM-360M]"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="smollm-360m",
+    family="dense",
+    n_layers=32,
+    d_model=960,
+    n_heads=15,           # padded to a tp multiple at build time
+    n_kv_heads=5,
+    d_ff=2560,
+    vocab_size=49152,
+    head_dim=64,
+    mlp_act="swiglu",
+    norm="rmsnorm",
+    tie_embeddings=True,
+    source="hf:HuggingFaceTB/SmolLM-360M",
+)

@@ -1,0 +1,20 @@
+"""xLSTM-350M: mLSTM + sLSTM blocks (7:1 ratio -> every 8th block is sLSTM).
+[arXiv:2405.04517; unverified]"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="xlstm-350m",
+    family="ssm",
+    block_pattern="xlstm",
+    n_layers=24,
+    d_model=1024,
+    n_heads=4,
+    n_kv_heads=4,
+    d_ff=0,               # xLSTM blocks carry their own up/down projections
+    vocab_size=50304,
+    expand=2,
+    slstm_every=8,
+    ssm_chunk=128,
+    norm="rmsnorm",
+    source="arXiv:2405.04517 (unverified tier)",
+)

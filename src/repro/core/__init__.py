@@ -1,0 +1,30 @@
+# The paper's primary contribution: column-wise N:M pruning as a composable
+# JAX feature — mask construction, compressed format, and the SparseLinear
+# layer abstraction all models in the zoo are built from.
+from repro.core.pruning import (  # noqa: F401
+    DENSE,
+    SparsityConfig,
+    colwise_importance,
+    colwise_nm_mask,
+    prune_tree,
+    resolve_dims,
+    rowwise_nm_mask,
+    unstructured_mask,
+)
+from repro.core.formats import (  # noqa: F401
+    ColwiseMeta,
+    init_compressed,
+    meta_for,
+    pack_colwise,
+    unpack_colwise,
+)
+from repro.core.sparse_linear import (  # noqa: F401
+    Boxed,
+    box_map,
+    compress_layer,
+    forward_compressed_xla,
+    forward_masked,
+    linear_apply,
+    linear_init,
+    unbox_tree,
+)

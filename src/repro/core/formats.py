@@ -1,0 +1,190 @@
+"""Compressed storage for column-wise N:M pruned weights.
+
+Layout (per linear layer of shape [d_in, d_out], tile T, k_kept kept indices):
+
+  values : [n_tiles, k_kept, T]   float — the retained weights, tile-major
+  idx    : [n_tiles, k_kept]      int32 — absolute d_in index of each kept row
+
+The kept indices of a tile are sorted ascending, so a gather of the activation
+matrix ``x[:, idx[t]]`` walks memory monotonically (good for both RVV strided
+loads in the paper's setting and TPU VMEM gathers here).
+
+The paper stores "compressed weight format and an index array" (Fig. 1); this
+is the same structure generalized to tile-shared indices.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.pruning import SparsityConfig, resolve_dims
+
+
+class ColwiseMeta(NamedTuple):
+    """Static metadata of a compressed layer (hashable, not traced)."""
+
+    d_in: int
+    d_out: int
+    tile: int
+    m: int
+    n: int
+
+    @property
+    def n_tiles(self) -> int:
+        return self.d_out // self.tile
+
+    @property
+    def k_kept(self) -> int:
+        return (self.d_in // self.m) * self.n
+
+    @property
+    def density(self) -> float:
+        return self.k_kept / self.d_in
+
+
+def meta_for(d_in: int, d_out: int, cfg: SparsityConfig) -> ColwiseMeta:
+    tile, m, n, _, _, _ = resolve_dims(d_in, d_out, cfg)
+    return ColwiseMeta(d_in=d_in, d_out=d_out, tile=tile, m=m, n=n)
+
+
+def keep_matrix_from_mask(mask: jax.Array, tile: int) -> jax.Array:
+    """[d_in, d_out] column-wise mask -> [n_tiles, d_in] per-tile keep flags."""
+    d_in, d_out = mask.shape
+    n_tiles = d_out // tile
+    return mask.reshape(d_in, n_tiles, tile)[:, :, 0].T  # [n_tiles, d_in]
+
+
+def indices_from_keep(keep: jax.Array, k_kept: int) -> jax.Array:
+    """Per-tile ascending indices of kept d_in positions.
+
+    keep: [n_tiles, d_in] bool with exactly k_kept True per row.
+    Returns [n_tiles, k_kept] int32.
+    """
+    n_tiles, d_in = keep.shape
+    iota = jnp.arange(d_in, dtype=jnp.int32)
+    # Kept positions keep their index; dropped ones are pushed past d_in so a
+    # full sort puts kept indices (ascending) first.
+    key = jnp.where(keep, iota[None, :], d_in + iota[None, :])
+    order = jnp.sort(key, axis=-1)[:, :k_kept]
+    return order.astype(jnp.int32)
+
+
+def pack_colwise(
+    w: jax.Array, mask: jax.Array, meta: ColwiseMeta
+) -> Tuple[jax.Array, jax.Array]:
+    """Compress a dense [d_in, d_out] weight under a column-wise mask.
+
+    Returns (values [n_tiles, k_kept, tile], idx [n_tiles, k_kept]).
+    """
+    keep = keep_matrix_from_mask(mask, meta.tile)
+    idx = indices_from_keep(keep, meta.k_kept)  # [n_tiles, k]
+    # w tiled: [d_in, n_tiles, tile]
+    wt = w.reshape(meta.d_in, meta.n_tiles, meta.tile)
+    # values[t, j, :] = wt[idx[t, j], t, :]
+    values = jax.vmap(lambda ids, t: wt[ids, t], in_axes=(0, 0))(
+        idx, jnp.arange(meta.n_tiles)
+    )
+    return values, idx
+
+
+def unpack_colwise(values: jax.Array, idx: jax.Array, meta: ColwiseMeta) -> jax.Array:
+    """Decompress back to a dense (masked) [d_in, d_out] weight."""
+    n_tiles, k, tile = values.shape
+    assert (n_tiles, tile) == (meta.n_tiles, meta.tile), (values.shape, meta)
+
+    def one_tile(vals, ids):
+        w_t = jnp.zeros((meta.d_in, tile), vals.dtype)
+        return w_t.at[ids].set(vals)
+
+    wt = jax.vmap(one_tile)(values, idx)  # [n_tiles, d_in, tile]
+    return wt.transpose(1, 0, 2).reshape(meta.d_in, meta.d_out)
+
+
+def pack_reduce(
+    w: jax.Array, mask: jax.Array, groups: int
+) -> Tuple[jax.Array, jax.Array]:
+    """Compress for REDUCE-mode execution: the prune unit spans the full
+    output dim (tile = d_out) and the N:M groups along d_in align with the
+    tensor-parallel shards, so the activation gather is shard-local.
+
+    Returns (values [G, n_per, d_out], idx_within [G, n_per]) where
+    idx_within are group-LOCAL indices in [0, d_in/G).
+    """
+    d_in, d_out = w.shape
+    assert d_in % groups == 0, (d_in, groups)
+    m = d_in // groups
+    keep = mask[:, 0]  # colwise mask with tile=d_out: same for all outputs
+    keep_g = keep.reshape(groups, m)
+    n_per = int(keep_g.sum(axis=1)[0]) if hasattr(keep_g, "tolist") else 0
+    counts = jnp.asarray(keep_g.sum(axis=1))
+    # equal counts per group are required (N:M with M = d_in/G guarantees it)
+    n_per = int(counts[0])
+    iota = jnp.arange(m, dtype=jnp.int32)
+    key = jnp.where(keep_g, iota[None, :], m + iota[None, :])
+    idx_within = jnp.sort(key, axis=-1)[:, :n_per].astype(jnp.int32)
+    w_g = w.reshape(groups, m, d_out)
+    values = jax.vmap(lambda wg, ids: wg[ids])(w_g, idx_within)  # [G, n, d_out]
+    return values, idx_within
+
+
+def unpack_reduce(values: jax.Array, idx: jax.Array, d_in: int) -> jax.Array:
+    g, n, d_out = values.shape
+    m = d_in // g
+
+    def one(vals, ids):
+        return jnp.zeros((m, d_out), vals.dtype).at[ids].set(vals)
+
+    return jax.vmap(one)(values, idx).reshape(d_in, d_out)
+
+
+def init_compressed_reduce(
+    key: jax.Array,
+    d_in: int,
+    d_out: int,
+    groups: int,
+    n_per: int,
+    dtype=jnp.float32,
+    scale: Optional[float] = None,
+):
+    m = d_in // groups
+    if scale is None:
+        scale = 1.0 / np.sqrt(max(groups * n_per, 1))
+    values = jax.random.normal(key, (groups, n_per, d_out), dtype)
+    values = values * jnp.asarray(scale, dtype)
+    stride = max(m // n_per, 1)
+    idx = jnp.broadcast_to(
+        ((jnp.arange(n_per, dtype=jnp.int32) * stride) % m)[None, :], (groups, n_per)
+    )
+    return values, jnp.asarray(idx, jnp.int32)
+
+
+def init_compressed(
+    key: jax.Array,
+    d_in: int,
+    d_out: int,
+    cfg: SparsityConfig,
+    dtype=jnp.float32,
+    scale: Optional[float] = None,
+):
+    """Directly initialize a compressed layer (no dense materialization).
+
+    Used when a model is *born* sparse (e.g. the 72B dry-run configs): kept
+    indices are evenly strided per group — the actual support would come from
+    pruning a trained model; for shape/dry-run purposes the strided support is
+    representative.
+    """
+    meta = meta_for(d_in, d_out, cfg)
+    if scale is None:
+        scale = 1.0 / np.sqrt(max(meta.k_kept, 1))
+    values = jax.random.normal(key, (meta.n_tiles, meta.k_kept, meta.tile), dtype)
+    values = values * jnp.asarray(scale, dtype)
+    n_groups = d_in // meta.m
+    stride = max(meta.m // meta.n, 1)
+    within = (jnp.arange(meta.n, dtype=jnp.int32) * stride) % meta.m
+    base = jnp.arange(n_groups, dtype=jnp.int32) * meta.m
+    idx1 = (base[:, None] + within[None, :]).reshape(-1)  # [k_kept]
+    idx = jnp.broadcast_to(idx1[None, :], (meta.n_tiles, meta.k_kept))
+    return values, jnp.asarray(idx, jnp.int32)

@@ -1,0 +1,268 @@
+"""Mask construction for column-wise N:M pruning (the paper's core idea) and the
+baselines it compares against (row-wise N:M, unstructured magnitude).
+
+Conventions
+-----------
+A linear layer computes ``y = x @ w`` with ``w`` of shape ``[d_in, d_out]``.
+The *reduction* (contraction) dimension is ``d_in``; this corresponds to the
+"columns" of the paper's weight matrix ``W[out, in]`` (the paper draws the
+transposed orientation).  "Column-wise" pruning therefore groups, for every
+*output-feature tile* of size ``T``, whole d_in-positions as prune/keep units:
+all ``T`` outputs of a tile share the same kept d_in indices.
+
+N:M grouping happens along ``d_in``: out of every ``M`` consecutive positions,
+``N`` are kept.  ``M = d_in`` (one group spanning the whole reduction dim) is
+the paper's "adaptive M" configuration, which approximates unstructured
+pruning while staying executable as a gather + dense matmul.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# Sparsity configuration
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class SparsityConfig:
+    """Configuration of the column-wise N:M pruning feature.
+
+    Attributes:
+      sparsity: fraction of weights removed, in [0, 1). 0 disables pruning.
+      m: N:M group size along d_in. ``None`` means the full reduction
+        dimension (the paper's adaptive-M mode).
+      tile: output-feature tile size T sharing one set of kept indices.
+        ``None`` lets the layer pick ``d_out // (tp * tiles_per_shard)`` so the
+        tile axis shards exactly over the tensor-parallel mesh axis.
+      tiles_per_shard: number of tiles per tensor-parallel shard when
+        ``tile is None``.
+      format: execution format — ``dense`` | ``masked`` | ``compressed_xla`` |
+        ``compressed_pallas``.
+      min_dim: layers with ``min(d_in, d_out) < min_dim`` are left dense (the
+        paper similarly skips the 3-channel stem conv).
+      scheme: ``colwise`` (the paper's technique) or ``rowwise`` (the
+        conventional N:M baseline the paper compares against).
+    """
+
+    sparsity: float = 0.0
+    m: Optional[int] = None
+    tile: Optional[int] = None
+    tiles_per_shard: int = 1
+    format: str = "dense"
+    min_dim: int = 128
+    scheme: str = "colwise"
+    # beyond-paper: shard-local REDUCE-mode compression for layers whose
+    # reduction dim is TP-sharded (down/o-proj) — groups align with shards
+    shard_local_reduce: bool = False
+    reduce_groups: int = 0
+
+    @property
+    def enabled(self) -> bool:
+        return self.sparsity > 0.0 and self.format != "dense"
+
+    def applies_to(self, d_in: int, d_out: int) -> bool:
+        return self.enabled and min(d_in, d_out) >= self.min_dim
+
+    def with_(self, **kw) -> "SparsityConfig":
+        return dataclasses.replace(self, **kw)
+
+
+DENSE = SparsityConfig()
+
+
+# ---------------------------------------------------------------------------
+# Shape helpers
+# ---------------------------------------------------------------------------
+
+
+def choose_tile(d_out: int, requested: Optional[int]) -> int:
+    """Largest divisor of d_out that is <= requested (defaults to d_out)."""
+    if requested is None or requested >= d_out:
+        return d_out
+    t = min(requested, d_out)
+    while d_out % t != 0:
+        t -= 1
+    return max(t, 1)
+
+
+def choose_group(d_in: int, requested: Optional[int]) -> int:
+    """Largest divisor of d_in that is <= requested (defaults to d_in)."""
+    if requested is None or requested >= d_in:
+        return d_in
+    m = min(requested, d_in)
+    while d_in % m != 0:
+        m -= 1
+    return max(m, 1)
+
+
+def kept_per_group(m: int, sparsity: float) -> int:
+    """N = number of kept elements per group of M at the given sparsity."""
+    n = int(round(m * (1.0 - sparsity)))
+    return int(np.clip(n, 1, m))
+
+
+def resolve_dims(d_in: int, d_out: int, cfg: SparsityConfig):
+    """Resolve (tile T, group M, kept-per-group N, n_tiles, n_groups, k_kept)."""
+    tile = choose_tile(d_out, cfg.tile)
+    m = choose_group(d_in, cfg.m)
+    n = kept_per_group(m, cfg.sparsity)
+    n_tiles = d_out // tile
+    n_groups = d_in // m
+    k_kept = n_groups * n
+    return tile, m, n, n_tiles, n_groups, k_kept
+
+
+# ---------------------------------------------------------------------------
+# Importance + masks
+# ---------------------------------------------------------------------------
+
+
+def colwise_importance(w: jax.Array, tile: int) -> jax.Array:
+    """L1 importance of each (tile, d_in) column group.
+
+    Returns [n_tiles, d_in]: score of keeping d_in-position i for tile t is the
+    L1 norm of w[i, t*T:(t+1)*T]  (paper §3.1: "we use the L1 norm to evaluate
+    the importance of each column group").
+    """
+    d_in, d_out = w.shape
+    n_tiles = d_out // tile
+    wt = jnp.abs(w).reshape(d_in, n_tiles, tile)
+    return wt.sum(axis=-1).T  # [n_tiles, d_in]
+
+
+def _topn_mask_lastdim(scores: jax.Array, n: int) -> jax.Array:
+    """Boolean mask keeping exactly the top-n entries of the last dim.
+
+    Ties are broken by position (earlier index wins) so exactly n entries are
+    kept — argsort is stable on the negated scores.
+    """
+    m = scores.shape[-1]
+    order = jnp.argsort(-scores, axis=-1)  # descending, stable
+    ranks = jnp.argsort(order, axis=-1)
+    return ranks < n
+
+
+def colwise_nm_mask(
+    w: jax.Array,
+    sparsity: float,
+    m: Optional[int] = None,
+    tile: Optional[int] = None,
+) -> jax.Array:
+    """Column-wise N:M mask (the paper's technique).
+
+    For every output tile of size T and every group of M consecutive d_in
+    positions, keep the N = (1-sparsity)*M positions with the largest L1 norm
+    over the tile. Returns a boolean mask of w's shape where every kept d_in
+    position is kept for the *entire* tile.
+    """
+    d_in, d_out = w.shape
+    cfg = SparsityConfig(sparsity=sparsity, m=m, tile=tile, format="masked")
+    tile, m, n, n_tiles, n_groups, _ = resolve_dims(d_in, d_out, cfg)
+    scores = colwise_importance(w, tile)  # [n_tiles, d_in]
+    scores = scores.reshape(n_tiles, n_groups, m)
+    keep = _topn_mask_lastdim(scores, n)  # [n_tiles, n_groups, m]
+    keep = keep.reshape(n_tiles, d_in)  # [n_tiles, d_in]
+    # expand across the tile: [d_in, n_tiles, tile] -> [d_in, d_out]
+    mask = jnp.repeat(keep.T[:, :, None], tile, axis=2).reshape(d_in, d_out)
+    return mask
+
+
+def rowwise_nm_mask(
+    w: jax.Array, sparsity: float, m: Optional[int] = None
+) -> jax.Array:
+    """Conventional (row-based) N:M pruning baseline.
+
+    Every output feature independently keeps N of every M consecutive d_in
+    positions by magnitude. Equivalent to the paper's column-wise scheme with
+    tile T=1 (paper §4.5, configuration 1).
+    """
+    return colwise_nm_mask(w, sparsity, m=m, tile=1)
+
+
+def unstructured_mask(w: jax.Array, sparsity: float) -> jax.Array:
+    """Global magnitude pruning (upper bound on flexibility)."""
+    k = int(round(w.size * (1.0 - sparsity)))
+    k = max(k, 1)
+    flat = jnp.abs(w).reshape(-1)
+    mask = _topn_mask_lastdim(flat, k)
+    return mask.reshape(w.shape)
+
+
+# ---------------------------------------------------------------------------
+# Mask invariants (used by tests and by pack())
+# ---------------------------------------------------------------------------
+
+
+def mask_is_colwise(mask: np.ndarray, tile: int) -> bool:
+    """Check that within each output tile all columns share the keep pattern."""
+    d_in, d_out = mask.shape
+    n_tiles = d_out // tile
+    m = np.asarray(mask).reshape(d_in, n_tiles, tile)
+    return bool(np.all(m.all(axis=2) == m.any(axis=2)))
+
+
+def mask_nm_counts(mask: np.ndarray, m_group: int) -> np.ndarray:
+    """Per-(group, column) kept counts along d_in — for N:M verification."""
+    d_in, d_out = mask.shape
+    g = d_in // m_group
+    return np.asarray(mask).reshape(g, m_group, d_out).sum(axis=1)
+
+
+# ---------------------------------------------------------------------------
+# One-shot pruning over a parameter tree
+# ---------------------------------------------------------------------------
+
+
+def _mask_nd(w: jax.Array, mask_fn):
+    """Apply a 2-D mask function over the trailing two dims of an N-D weight
+    (scan-stacked layers are [L, ..., d_in, d_out])."""
+    if w.ndim == 2:
+        return mask_fn(w)
+    lead = w.shape[:-2]
+    flat = w.reshape((-1,) + w.shape[-2:])
+    masks = jax.vmap(mask_fn)(flat)
+    return masks.reshape(lead + w.shape[-2:])
+
+
+def prune_tree(params, cfg: SparsityConfig, is_weight=None):
+    """One-shot prune every >=2-D weight in a pytree (magnitude/L1, the
+    paper's one-shot recipe); stacked layer weights ([L, d_in, d_out]) are
+    masked per layer via vmap. Returns (masked_params, masks) with masks a
+    matching tree containing None for untouched leaves.
+
+    is_weight: optional predicate (path, leaf) -> bool to select leaves.
+    """
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    new_leaves, mask_leaves = [], []
+    for path, leaf in flat:
+        take = (
+            hasattr(leaf, "ndim")
+            and leaf.ndim >= 2
+            and jnp.issubdtype(leaf.dtype, jnp.floating)
+            and cfg.applies_to(leaf.shape[-2], leaf.shape[-1])
+        )
+        if take and is_weight is not None:
+            take = is_weight(path, leaf)
+        if take:
+            if cfg.scheme == "rowwise":
+                fn = lambda w: rowwise_nm_mask(w, cfg.sparsity, m=cfg.m)
+            else:
+                fn = lambda w: colwise_nm_mask(w, cfg.sparsity, m=cfg.m, tile=cfg.tile)
+            mask = _mask_nd(leaf, fn)
+            new_leaves.append(leaf * mask.astype(leaf.dtype))
+            mask_leaves.append(mask)
+        else:
+            new_leaves.append(leaf)
+            mask_leaves.append(None)
+    return (
+        jax.tree_util.tree_unflatten(treedef, new_leaves),
+        jax.tree_util.tree_unflatten(treedef, mask_leaves),
+    )

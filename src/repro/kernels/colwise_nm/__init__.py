@@ -1,0 +1,3 @@
+from repro.kernels.colwise_nm.kernel import colwise_nm_matmul_pallas, vmem_bytes  # noqa: F401
+from repro.kernels.colwise_nm.ops import colwise_nm_matmul  # noqa: F401
+from repro.kernels.colwise_nm.ref import colwise_nm_matmul_ref  # noqa: F401

@@ -1,0 +1,127 @@
+"""Pallas TPU kernel for column-wise N:M sparse matmul (paper Algorithm 1).
+
+TPU adaptation of the RVV micro-kernel:
+
+  RVV                         TPU (this kernel)
+  -------------------------   ---------------------------------------------
+  T vector-register           float32 VMEM scratch accumulator [block_b, T]
+  accumulators
+  scalar weight × data         dense [block_b, block_k] × [block_k, T] MXU
+  vector vfmacc per kept       matmul per kept-column *chunk* (the gather of
+  column                       block_k kept columns happens in VMEM first)
+  indexed vector load of the   lane-dimension gather ``x_blk[:, ids]`` from
+  data-matrix row              the VMEM-resident activation block
+  LMUL / vector length         block_k, tile width T (lane multiples of 128)
+
+The kept-column indices are shared by the whole T-wide output tile (the
+paper's column-wise constraint), which is exactly what makes the inner step a
+*dense* MXU matmul — sparsity is realized as a shorter contraction, not as
+masked compute.
+
+Grid: (B/block_b, n_tiles, k_kept/block_k); the last dimension is a sequential
+("arbitrary") accumulation dimension, the first two are parallel.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, idx_ref, v_ref, o_ref, acc_ref, *, n_kc: int, out_dtype, interpret: bool):
+    kc = pl.program_id(2)
+
+    @pl.when(kc == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    ids = idx_ref[0]  # [block_k] int32 — kept d_in indices for this chunk
+    x_blk = x_ref[...]  # [block_b, d_in] activation rows (VMEM resident)
+    # In-VMEM gather of the kept columns: the fusion of "im2col/packing" style
+    # data movement into the compute kernel — the gathered operand never
+    # exists in HBM.  (Mosaic: lane-dim dynamic_gather; validated via
+    # interpret mode on CPU.)
+    x_sel = jnp.take(x_blk, ids, axis=1)  # [block_b, block_k]
+    v_blk = v_ref[0]
+    if interpret:
+        # XLA:CPU has no bf16xbf16->f32 dot; the TPU path feeds the MXU
+        # native bf16 operands with f32 accumulation.
+        x_sel = x_sel.astype(jnp.float32)
+        v_blk = v_blk.astype(jnp.float32)
+    acc_ref[...] += jnp.dot(
+        x_sel, v_blk, preferred_element_type=jnp.float32
+    )
+
+    @pl.when(kc == n_kc - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(out_dtype)
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def colwise_nm_matmul_pallas(
+    x: jax.Array,
+    values: jax.Array,
+    idx: jax.Array,
+    *,
+    block_b: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """y[b, t*T:(t+1)*T] = x[b, idx[t]] @ values[t].
+
+    x: [B, d_in]; values: [n_tiles, k_kept, T]; idx: [n_tiles, k_kept].
+    Returns [B, n_tiles * T].
+    """
+    B, d_in = x.shape
+    n_tiles, k_kept, tile = values.shape
+    assert idx.shape == (n_tiles, k_kept), (idx.shape, values.shape)
+
+    block_b = min(block_b, _ceil_to(B, 8))
+    block_k = min(block_k, _ceil_to(k_kept, 8))
+
+    b_pad = _ceil_to(B, block_b)
+    k_pad = _ceil_to(k_kept, block_k)
+    if b_pad != B:
+        x = jnp.pad(x, ((0, b_pad - B), (0, 0)))
+    if k_pad != k_kept:
+        # zero-valued padding rows gather x[:, 0] but multiply by 0 weights
+        values = jnp.pad(values, ((0, 0), (0, k_pad - k_kept), (0, 0)))
+        idx = jnp.pad(idx, ((0, 0), (0, k_pad - k_kept)))
+
+    n_b = b_pad // block_b
+    n_kc = k_pad // block_k
+    grid = (n_b, n_tiles, n_kc)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, n_kc=n_kc, out_dtype=x.dtype, interpret=interpret),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, d_in), lambda i, t, kc: (i, 0)),
+            pl.BlockSpec((1, block_k), lambda i, t, kc: (t, kc)),
+            pl.BlockSpec((1, block_k, tile), lambda i, t, kc: (t, kc, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_b, tile), lambda i, t, kc: (i, t)),
+        out_shape=jax.ShapeDtypeStruct((b_pad, n_tiles * tile), x.dtype),
+        scratch_shapes=[pltpu.VMEM((block_b, tile), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(x, idx, values)
+    return out[:B]
+
+
+def vmem_bytes(block_b: int, block_k: int, d_in: int, tile: int, in_bytes: int = 2) -> int:
+    """Analytic VMEM footprint of one grid step (for the auto-tuner)."""
+    x_blk = block_b * d_in * in_bytes
+    x_sel = block_b * block_k * in_bytes
+    v_blk = block_k * tile * in_bytes
+    acc = block_b * tile * 4
+    out = block_b * tile * in_bytes
+    return x_blk + x_sel + v_blk + acc + out

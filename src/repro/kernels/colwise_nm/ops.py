@@ -1,0 +1,62 @@
+"""Jitted public wrapper for the column-wise N:M sparse matmul kernel.
+
+Adds: leading-dim flattening, CPU interpret-mode auto-detection, and a
+custom VJP so the kernel is usable inside training graphs (backward runs as
+XLA gather/scatter — the forward is the latency-critical path the paper
+optimizes; its backward appears only in sparse finetuning).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.colwise_nm.kernel import colwise_nm_matmul_pallas
+
+
+def _should_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def _matmul(x, values, idx, block_b, block_k):
+    return colwise_nm_matmul_pallas(
+        x, values, idx, block_b=block_b, block_k=block_k, interpret=_should_interpret()
+    )
+
+
+def _fwd(x, values, idx, block_b, block_k):
+    y = _matmul(x, values, idx, block_b, block_k)
+    return y, (x, values, idx)
+
+
+def _bwd(block_b, block_k, res, dy):
+    x, values, idx = res
+    n_tiles, k_kept, tile = values.shape
+    dy_t = dy.reshape(*dy.shape[:-1], n_tiles, tile)
+    # dL/d(x_gathered) then scatter-add back to d_in positions
+    dxg = jnp.einsum("...tf,tkf->...tk", dy_t, values)
+    dx = jnp.zeros_like(x).at[..., idx].add(dxg)
+    xg = jnp.take(x, idx, axis=-1)  # [..., n_tiles, k]
+    dvalues = jnp.einsum("...tk,...tf->tkf", xg, dy_t).astype(values.dtype)
+    return dx, dvalues, None
+
+
+_matmul.defvjp(_fwd, _bwd)
+
+
+def colwise_nm_matmul(
+    x: jax.Array,
+    values: jax.Array,
+    idx: jax.Array,
+    *,
+    block_b: int = 128,
+    block_k: int = 128,
+) -> jax.Array:
+    """y = colwise-N:M-sparse matmul, any leading batch dims on x."""
+    n_tiles, k_kept, tile = values.shape
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    y = _matmul(x2, values, idx, block_b, block_k)
+    return y.reshape(*lead, n_tiles * tile)

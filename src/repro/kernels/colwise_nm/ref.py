@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for the column-wise N:M sparse matmul kernel.
+
+Deliberately implemented by *decompressing to a dense masked weight* and
+running a dense matmul, so it shares no code path with either the Pallas
+kernel or the gather-based XLA fast path it validates.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.formats import ColwiseMeta, unpack_colwise
+
+
+def colwise_nm_matmul_ref(x: jax.Array, values: jax.Array, idx: jax.Array, d_in=None) -> jax.Array:
+    n_tiles, k_kept, tile = values.shape
+    if d_in is None:
+        d_in = x.shape[-1]
+    # meta: m/n only matter for density bookkeeping, not for unpack
+    meta = ColwiseMeta(d_in=d_in, d_out=n_tiles * tile, tile=tile, m=d_in, n=k_kept)
+    w_dense = unpack_colwise(values, idx, meta)  # [d_in, d_out]
+    return x @ w_dense

@@ -1,0 +1,5 @@
+from repro.kernels.conv_gemm.ops import (  # noqa: F401
+    compress_conv_weights,
+    conv2d_colwise_sparse,
+)
+from repro.kernels.conv_gemm.ref import conv2d_cnhw_ref  # noqa: F401

@@ -1,0 +1,71 @@
+"""GEMM-based convolution assembled from the paper's two kernels:
+
+  conv = fused-im2col+pack  ∘  column-wise-N:M sparse GEMM
+
+This is the end-to-end convolution path the paper ships inside XNNPACK:
+the feature map is packed into V-wide strips in one pass, then each strip is
+multiplied by the (compressed) weight matrix with the Algorithm-1 micro-kernel.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.formats import ColwiseMeta, meta_for, pack_colwise
+from repro.core.pruning import SparsityConfig, colwise_nm_mask
+from repro.kernels.colwise_nm.ops import colwise_nm_matmul
+from repro.kernels.colwise_nm.ref import colwise_nm_matmul_ref
+from repro.kernels.im2col_pack.ops import im2col_pack
+from repro.kernels.im2col_pack.ref import out_size
+
+
+def compress_conv_weights(w_ohwi: jax.Array, cfg: SparsityConfig):
+    """Prune+compress an OHWI conv kernel column-wise over (kh, kw, c).
+
+    The GEMM weight matrix is [O, Kh*Kw*C]; tiles of T output channels share
+    kept (kh, kw, c) positions. Returns (values, idx, meta) for the sparse
+    GEMM where the *reduction* dim is Kh*Kw*C.
+    """
+    o, kh, kw, c = w_ohwi.shape
+    wmat = w_ohwi.reshape(o, kh * kw * c).T  # [K, O] = [d_in, d_out]
+    meta = meta_for(kh * kw * c, o, cfg)
+    mask = colwise_nm_mask(wmat, cfg.sparsity, m=cfg.m, tile=meta.tile)
+    values, idx = pack_colwise(wmat, mask, meta)
+    return values, idx, meta
+
+
+def conv2d_colwise_sparse(
+    x_cnhw: jax.Array,
+    values: jax.Array,
+    idx: jax.Array,
+    kh: int,
+    kw: int,
+    stride: int = 1,
+    pad: int = 0,
+    v: int = 128,
+    use_pallas: bool = True,
+) -> jax.Array:
+    """Sparse convolution: fused im2col+pack, then column-wise sparse GEMM.
+
+    Returns CNHW output [O, B, Ho, Wo].
+    """
+    c, b, h, w = x_cnhw.shape
+    ho = out_size(h, kh, stride, pad)
+    wo = out_size(w, kw, stride, pad)
+    n_pos = b * ho * wo
+    n_tiles, k_kept, tile = values.shape
+    o = n_tiles * tile
+
+    strips = im2col_pack(x_cnhw, kh=kh, kw=kw, stride=stride, pad=pad, v=v)
+    # strips: [n_strips, K, V]; GEMM per strip on the transposed strip so the
+    # kernel's batch dim is the V strip columns.
+    xt = strips.transpose(0, 2, 1).reshape(-1, kh * kw * c)  # [n_strips*V, K]
+    if use_pallas:
+        y = colwise_nm_matmul(xt, values, idx)  # [n_strips*V, O]
+    else:
+        y = colwise_nm_matmul_ref(xt, values, idx)
+    y = y[:n_pos]  # drop ragged strip padding
+    return y.T.reshape(o, b, ho, wo)

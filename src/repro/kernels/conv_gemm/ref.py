@@ -1,0 +1,21 @@
+"""Oracle for GEMM-based convolution in the paper's CNHW/OHWI layouts,
+implemented with jax.lax.conv_general_dilated (completely independent of the
+im2col/packing/sparse kernels it validates)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def conv2d_cnhw_ref(
+    x: jax.Array, w_ohwi: jax.Array, stride: int = 1, pad: int = 0
+) -> jax.Array:
+    """x: [C, B, H, W]; w: [O, Kh, Kw, C]. Returns CNHW output [O, B, Ho, Wo]."""
+    out = jax.lax.conv_general_dilated(
+        x,
+        w_ohwi,
+        window_strides=(stride, stride),
+        padding=((pad, pad), (pad, pad)),
+        dimension_numbers=("CNHW", "OHWI", "CNHW"),
+    )
+    return out

@@ -1,0 +1,3 @@
+from repro.kernels.flash_attn.kernel import flash_attention_pallas  # noqa: F401
+from repro.kernels.flash_attn.ops import flash_attention  # noqa: F401
+from repro.kernels.flash_attn.ref import flash_attention_ref  # noqa: F401

@@ -1,0 +1,29 @@
+"""Jitted public wrapper: GQA layout handling + CPU interpret fallback."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attn.kernel import flash_attention_pallas
+
+
+def _should_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, block_q: int = 128,
+                    block_k: int = 128) -> jax.Array:
+    """q: [B, Sq, H, D]; k/v: [B, Sk, KV, D] (GQA). Returns [B, Sq, H, D]."""
+    b, sq, h, d = q.shape
+    sk, kvh = k.shape[1], k.shape[2]
+    if h != kvh:
+        mapping = (jnp.arange(h) * kvh) // h
+        k = jnp.take(k, mapping, axis=2)
+        v = jnp.take(v, mapping, axis=2)
+    q2 = q.transpose(0, 2, 1, 3).reshape(b * h, sq, d)
+    k2 = k.transpose(0, 2, 1, 3).reshape(b * h, sk, d)
+    v2 = v.transpose(0, 2, 1, 3).reshape(b * h, sk, d)
+    o = flash_attention_pallas(q2, k2, v2, causal=causal, block_q=block_q,
+                               block_k=block_k, interpret=_should_interpret())
+    return o.reshape(b, h, sq, d).transpose(0, 2, 1, 3)

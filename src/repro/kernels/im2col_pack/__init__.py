@@ -1,0 +1,12 @@
+from repro.kernels.im2col_pack.kernel import im2col_pack_pallas  # noqa: F401
+from repro.kernels.im2col_pack.ops import (  # noqa: F401
+    im2col_only,
+    im2col_pack,
+    im2col_then_pack,
+)
+from repro.kernels.im2col_pack.ref import (  # noqa: F401
+    im2col_cnhw,
+    im2col_pack_ref,
+    out_size,
+    pack_strips,
+)

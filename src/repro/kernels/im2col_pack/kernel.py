@@ -1,0 +1,99 @@
+"""Pallas kernel: fused im2col + data packing (paper Algorithm 2, TPU analog).
+
+One pass moves each input element directly from the CNHW feature map into its
+packed-strip position; the intermediate patch matrix never exists in HBM.
+
+RVV -> TPU translation:
+  - vector length V / LMUL     -> strip width V (lane multiples: 128..1024)
+  - dynamic VL trim at the     -> iota-compare masks on the final/ragged strip
+    feature-map boundary          (no zero-copy padding regions are touched)
+  - scalar loop over (k, c)    -> grid dimensions (strip, k, c); each grid
+    with vector strip copies      step emits one V-wide strip row
+
+Grid: (n_strips, Kh*Kw, C_in).  The output block for step (s, k, c) is the
+single strip row [s, k*C+c, :].
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.im2col_pack.ref import out_size
+
+
+def _kernel(
+    x_ref,
+    o_ref,
+    *,
+    kh: int,
+    kw: int,
+    stride: int,
+    pad: int,
+    v: int,
+    b: int,
+    h: int,
+    w: int,
+    ho: int,
+    wo: int,
+):
+    s = pl.program_id(0)
+    k = pl.program_id(1)
+    ikh = k // kw
+    ikw = k % kw
+
+    p = s * v + jax.lax.iota(jnp.int32, v)  # flat output positions of strip
+    n_pos = b * ho * wo
+    bb = p // (ho * wo)
+    rem = p % (ho * wo)
+    oh = rem // wo
+    ow = rem % wo
+    ih = oh * stride - pad + ikh
+    iw = ow * stride - pad + ikw
+    valid = (p < n_pos) & (ih >= 0) & (ih < h) & (iw >= 0) & (iw < w)
+    # clamp so the gather itself is always in-bounds; masked after
+    bc = jnp.clip(bb, 0, b - 1)
+    ihc = jnp.clip(ih, 0, h - 1)
+    iwc = jnp.clip(iw, 0, w - 1)
+    vals = x_ref[0, bc, ihc, iwc]  # [v] gather from the channel's B×H×W block
+    o_ref[0, 0, :] = jnp.where(valid, vals, 0).astype(o_ref.dtype)
+
+
+def im2col_pack_pallas(
+    x: jax.Array,
+    kh: int,
+    kw: int,
+    stride: int = 1,
+    pad: int = 0,
+    v: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """Fused im2col+pack of a CNHW map -> [n_strips, KhKwC, V] strips."""
+    c, b, h, w = x.shape
+    ho = out_size(h, kh, stride, pad)
+    wo = out_size(w, kw, stride, pad)
+    n_pos = b * ho * wo
+    n_strips = -(-n_pos // v)
+
+    grid = (n_strips, kh * kw, c)
+    out = pl.pallas_call(
+        functools.partial(
+            _kernel, kh=kh, kw=kw, stride=stride, pad=pad, v=v, b=b, h=h, w=w, ho=ho, wo=wo
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, b, h, w), lambda s, k, cc: (cc, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1, v), lambda s, k, cc, _c=c: (s, k * _c + cc, 0)
+        ),
+        out_shape=jax.ShapeDtypeStruct((n_strips, kh * kw * c, v), x.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(x)
+    return out

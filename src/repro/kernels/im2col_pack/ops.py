@@ -1,0 +1,55 @@
+"""Jitted wrappers for fused im2col+packing, plus the un-fused baseline."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.im2col_pack.kernel import im2col_pack_pallas
+from repro.kernels.im2col_pack.ref import im2col_cnhw, im2col_pack_ref, pack_strips
+
+
+def _should_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("kh", "kw", "stride", "pad", "v"))
+def im2col_pack(x, *, kh, kw, stride=1, pad=0, v=128):
+    """Fused single-pass im2col + packing (the paper's optimization)."""
+    return im2col_pack_pallas(
+        x, kh, kw, stride=stride, pad=pad, v=v, interpret=_should_interpret()
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("kh", "kw", "stride", "pad", "v"))
+def im2col_then_pack(x, *, kh, kw, stride=1, pad=0, v=128):
+    """Two-pass baseline: materialize the patch matrix, then pack.
+
+    ``optimization_barrier`` pins the intermediate so XLA cannot silently fuse
+    the two passes — this is the memory-overhead configuration the paper
+    measures against (Fig. 6/8).
+    """
+    mat = im2col_cnhw(x, kh, kw, stride, pad)
+    mat = jax.lax.optimization_barrier(mat)
+    return pack_strips(mat, v)
+
+
+@functools.partial(jax.jit, static_argnames=("kh", "kw", "stride", "pad"))
+def im2col_only(x, *, kh, kw, stride=1, pad=0):
+    """im2col without packing (paper Fig. 8a's 'no packing' configuration)."""
+    return im2col_cnhw(x, kh, kw, stride, pad)
+
+
+def bytes_moved_fused(c, b, h, w, kh, kw, ho, wo, v, itemsize) -> int:
+    """Analytic data movement of the fused pass: each strip element is read
+    once from the map and written once to the strip."""
+    return 2 * kh * kw * c * (-(-b * ho * wo // v)) * v * itemsize
+
+
+def bytes_moved_unfused(c, b, h, w, kh, kw, ho, wo, v, itemsize) -> int:
+    """Two passes: im2col (read map, write matrix) + pack (read matrix,
+    write strips) — double traffic on the patch matrix."""
+    mat = kh * kw * c * b * ho * wo
+    strips = kh * kw * c * (-(-b * ho * wo // v)) * v
+    return (mat + mat + mat + strips) * itemsize

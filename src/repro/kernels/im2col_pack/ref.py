@@ -1,0 +1,56 @@
+"""Pure-jnp oracle for the fused im2col + data-packing kernel (paper Alg. 2).
+
+The oracle runs the two steps *separately* — first im2col into the full patch
+matrix, then packing into vector-aligned strips — i.e. the baseline the paper
+fuses away.  The fused kernel must be bit-identical; only its data movement
+differs.
+
+Layouts follow the paper exactly:
+  input feature map : CNHW  [C_in, B, H, W]  (W contiguous => vectorizable)
+  patch matrix rows : (kh, kw, c) flattened, i.e. row = k * C_in + c
+  patch matrix cols : (b, oh, ow) flattened output positions
+  packed strips     : [n_strips, K_h*K_w*C_in, V]  — V-wide column strips
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def out_size(h: int, k: int, stride: int, pad: int) -> int:
+    return (h + 2 * pad - k) // stride + 1
+
+
+def im2col_cnhw(x: jax.Array, kh: int, kw: int, stride: int = 1, pad: int = 0) -> jax.Array:
+    """im2col on a CNHW feature map -> [Kh*Kw*C, B*Ho*Wo] patch matrix."""
+    c, b, h, w = x.shape
+    ho = out_size(h, kh, stride, pad)
+    wo = out_size(w, kw, stride, pad)
+    xp = jnp.pad(x, ((0, 0), (0, 0), (pad, pad), (pad, pad)))
+    rows = []
+    for ikh in range(kh):
+        for ikw in range(kw):
+            sl = jax.lax.slice(
+                xp,
+                (0, 0, ikh, ikw),
+                (c, b, ikh + (ho - 1) * stride + 1, ikw + (wo - 1) * stride + 1),
+                (1, 1, stride, stride),
+            )  # [C, B, Ho, Wo]
+            rows.append(sl.reshape(c, b * ho * wo))
+    mat = jnp.stack(rows, axis=0)  # [KhKw, C, P]
+    return mat.reshape(kh * kw * c, b * ho * wo)
+
+
+def pack_strips(mat: jax.Array, v: int) -> jax.Array:
+    """Pack a [R, P] matrix into V-wide strips [ceil(P/V), R, V] (paper Fig. 2)."""
+    r, p = mat.shape
+    n_strips = -(-p // v)
+    mat = jnp.pad(mat, ((0, 0), (0, n_strips * v - p)))
+    return mat.reshape(r, n_strips, v).transpose(1, 0, 2)
+
+
+def im2col_pack_ref(
+    x: jax.Array, kh: int, kw: int, stride: int = 1, pad: int = 0, v: int = 128
+) -> jax.Array:
+    """Two-pass baseline: im2col, then pack. Output [n_strips, KhKwC, V]."""
+    return pack_strips(im2col_cnhw(x, kh, kw, stride, pad), v)

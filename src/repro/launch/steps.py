@@ -1,0 +1,148 @@
+"""Jitted step builders (train / prefill / decode) with full sharding specs —
+shared by the real trainer, the serving engine, and the multi-pod dry-run."""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeCell
+from repro.models import registry as reg
+from repro.optim import AdamWConfig, adamw_init, adamw_update
+from repro.sharding import RULES, ShardingCtx, resolve_spec, use_ctx
+
+
+def named(mesh, spec_names, shape):
+    return NamedSharding(mesh, resolve_spec(shape, spec_names, RULES, mesh))
+
+
+def tree_shardings(mesh, spec_tree, shape_tree):
+    return jax.tree_util.tree_map(
+        lambda s, a: named(mesh, s, a.shape),
+        spec_tree,
+        shape_tree,
+        is_leaf=lambda s: isinstance(s, tuple),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Train step
+# ---------------------------------------------------------------------------
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig, microbatches: int = 1):
+    """(params, opt_state, batch) -> (params, opt_state, metrics).
+
+    Gradient accumulation over `microbatches` along the batch dim (scan) —
+    cuts activation memory for the big train cells.
+    """
+    lfn = reg.loss_fn(cfg)
+
+    def step(params, opt_state, batch):
+        if microbatches == 1:
+            (loss, metrics), grads = jax.value_and_grad(lfn, has_aux=True, allow_int=True)(
+                params, batch
+            )
+        else:
+            def split(x):
+                b = x.shape[0]
+                return x.reshape(microbatches, b // microbatches, *x.shape[1:])
+
+            mb = jax.tree_util.tree_map(split, batch)
+
+            def acc_body(carry, mbatch):
+                g_acc, l_acc = carry
+                (l, m), g = jax.value_and_grad(lfn, has_aux=True, allow_int=True)(
+                    params, mbatch
+                )
+                g_acc = jax.tree_util.tree_map(
+                    lambda a, b2: a + b2.astype(a.dtype)
+                    if jnp.issubdtype(a.dtype, jnp.floating)
+                    else a,
+                    g_acc,
+                    g,
+                )
+                return (g_acc, l_acc + l), None
+
+            g0 = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32)
+                if jnp.issubdtype(p.dtype, jnp.floating)
+                else p,
+                params,
+            )
+            (grads, loss_sum), _ = jax.lax.scan(acc_body, (g0, 0.0), mb)
+            grads = jax.tree_util.tree_map(
+                lambda g: g / microbatches if jnp.issubdtype(g.dtype, jnp.floating) else g,
+                grads,
+            )
+            loss = loss_sum / microbatches
+            metrics = {"nll": loss, "aux": jnp.zeros(())}
+        new_params, new_opt, gnorm = adamw_update(params, grads, opt_state, opt_cfg)
+        metrics = dict(metrics, loss=loss, grad_norm=gnorm)
+        return new_params, new_opt, metrics
+
+    return step
+
+
+def train_shardings(cfg: ModelConfig, mesh: Mesh, param_shapes, param_specs, batch):
+    """(in_shardings, out_shardings) for the train step."""
+    p_sh = tree_shardings(mesh, param_specs, param_shapes)
+    opt_shapes = jax.eval_shape(adamw_init, param_shapes)
+    from repro.optim import opt_state_specs
+
+    o_specs_full = opt_state_specs(param_specs)
+    o_specs = {k: o_specs_full[k] for k in opt_shapes}
+    o_sh = tree_shardings(mesh, o_specs, opt_shapes)
+    b_specs = reg.batch_specs(cfg, batch)
+    b_sh = tree_shardings(mesh, b_specs, batch)
+    rep = NamedSharding(mesh, P())
+    metrics_sh = None  # let XLA pick (scalars)
+    return (p_sh, o_sh, b_sh), (p_sh, o_sh, metrics_sh)
+
+
+# ---------------------------------------------------------------------------
+# Serve steps
+# ---------------------------------------------------------------------------
+
+
+def make_prefill_step(cfg: ModelConfig):
+    pf = reg.prefill_fn(cfg)
+
+    def step(params, batch):
+        logits, cache = pf(params, batch)
+        return logits, cache
+
+    return step
+
+
+def make_decode_step(cfg: ModelConfig):
+    df = reg.decode_fn(cfg)
+
+    def step(params, cache, tokens, pos):
+        return df(params, cache, tokens, pos)
+
+    return step
+
+
+def serve_shardings(cfg: ModelConfig, mesh: Mesh, param_shapes, param_specs, spec: Dict,
+                    cache_auto: bool = True):
+    p_sh = tree_shardings(mesh, param_specs, param_shapes)
+    if spec["kind"] == "prefill":
+        b_specs = reg.batch_specs(cfg, spec["batch"])
+        b_sh = tree_shardings(mesh, b_specs, spec["batch"])
+        return (p_sh, b_sh)
+    if cache_auto:
+        # leave the cache layout to GSPMD: forcing the logical spec made the
+        # partitioner materialize a full f32 gather at the donated-output
+        # boundary when its preferred internal sharding (partial-axis KV)
+        # differed (EXPERIMENTS §Perf iteration K)
+        c_sh = jax.tree_util.tree_map(lambda _: None, spec["cache"])
+    else:
+        cache_specs = reg.cache_specs(cfg, spec["cache"])
+        c_sh = tree_shardings(mesh, cache_specs, spec["cache"])
+    tok_sh = named(mesh, ("act_batch", None), spec["tokens"].shape)
+    pos_sh = NamedSharding(mesh, P())
+    return (p_sh, c_sh, tok_sh, pos_sh), c_sh

@@ -1,0 +1,14 @@
+from repro.models.registry import (  # noqa: F401
+    abstract_cache,
+    abstract_params,
+    batch_specs,
+    cache_init_fn,
+    cache_specs,
+    decode_fn,
+    forward_fn,
+    init_fn,
+    init_params,
+    input_specs,
+    loss_fn,
+    prefill_fn,
+)

@@ -1,0 +1,316 @@
+"""GQA attention with tensor-parallel head padding, RoPE/M-RoPE, KV cache.
+
+Design notes (distribution):
+  - q heads are padded to a multiple of tp; the padded heads' o_proj rows are
+    zero so the function is exactly the unpadded one.
+  - kv heads are sharded over the model axis only when divisible (the logical
+    rules drop the axis otherwise) — for small GQA archs the kv tensors are
+    tiny and replication is cheaper than the reshard.
+  - GQA is computed with a grouped einsum (q reshaped [B,S,KV,G,D]) so the KV
+    tensors are never materialized at H width — essential for 32k/512k decode
+    caches.  Only the padded-head case where H % KV != 0 falls back to an
+    explicit head-mapped expansion (small archs only).
+  - decode attends one query against a [B, S_max, KV, D] cache: O(S) work.
+    For long_500k the cache's seq dim carries the 'act_kv_seq' logical axis so
+    GSPMD shards it over the otherwise-idle data axis (distributed
+    flash-decode); scores at 512k, B=1 are ~64 MB in f32.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.sparse_linear import Boxed, linear_apply, linear_init
+from repro.models.common import apply_rope, mrope_cos_sin, rope_cos_sin
+from repro.sharding import shd
+
+
+def attn_init(key, cfg: ModelConfig, *, cross: bool = False):
+    """QKV/O projections (each a SparseLinear; o proj is reduce-oriented)."""
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    h, kv = cfg.padded_heads, cfg.n_kv_heads
+    ks = jax.random.split(key, 4)
+    scfg = cfg.sparsity
+    dtype = jnp.dtype(cfg.param_dtype)
+    p = {
+        "q": linear_init(ks[0], d, h * hd, scfg, dtype=dtype, use_bias=cfg.qkv_bias,
+                         in_ax="embed", out_ax="heads_flat"),
+        "k": linear_init(ks[1], d, kv * hd, scfg, dtype=dtype, use_bias=cfg.qkv_bias,
+                         in_ax="embed", out_ax="kv_flat"),
+        "v": linear_init(ks[2], d, kv * hd, scfg, dtype=dtype, use_bias=cfg.qkv_bias,
+                         in_ax="embed", out_ax="kv_flat"),
+        "o": linear_init(ks[3], h * hd, d, scfg, dtype=dtype,
+                         in_ax="heads_flat", out_ax="embed", mode="reduce"),
+    }
+    if cfg.n_heads != cfg.padded_heads and "w" in p["o"]:
+        # zero the padded heads' output rows => exact numerics
+        ow = p["o"]["w"]
+        w = ow.value.reshape(h, hd, d)
+        w = w.at[cfg.n_heads:].set(0.0)
+        p["o"]["w"] = Boxed(w.reshape(h * hd, d), ow.spec)
+    return p
+
+
+def _qkv(params, cfg: ModelConfig, x: jax.Array, positions, mrope_positions):
+    b, s, _ = x.shape
+    hd = cfg.resolved_head_dim
+    h, kv = cfg.padded_heads, cfg.n_kv_heads
+    q = linear_apply(params["q"], x).reshape(b, s, h, hd)
+    k = linear_apply(params["k"], x).reshape(b, s, kv, hd)
+    v = linear_apply(params["v"], x).reshape(b, s, kv, hd)
+    if cfg.use_rope:
+        if cfg.mrope and mrope_positions is not None:
+            cos, sin = mrope_cos_sin(mrope_positions, hd, cfg.rope_theta, cfg.mrope_sections)
+        else:
+            cos, sin = rope_cos_sin(positions, hd, cfg.rope_theta)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+    return q, k, v
+
+
+def _expand_kv(k: jax.Array, n_q_heads: int) -> jax.Array:
+    """Head-mapped expansion [B,S,KV,D] -> [B,S,H,D]; fallback for H%KV!=0."""
+    kvh = k.shape[2]
+    if n_q_heads == kvh:
+        return k
+    mapping = (jnp.arange(n_q_heads) * kvh) // n_q_heads
+    return jnp.take(k, mapping, axis=2)
+
+
+def sdpa_gqa(q, k, v, *, causal: bool, q_offset=0, kv_len=None) -> jax.Array:
+    """Scaled dot-product attention with native GQA grouping.
+
+    q: [B, Sq, H, D]; k/v: [B, Sk, KV, D]. Returns [B, Sq, H, D].
+    """
+    b, sq, h, d = q.shape
+    sk, kvh = k.shape[1], k.shape[2]
+    scale = 1.0 / math.sqrt(d)
+    if h % kvh != 0:
+        k = _expand_kv(k, h)
+        v = _expand_kv(v, h)
+        kvh = h
+    g = h // kvh
+    qg = q.reshape(b, sq, kvh, g, d)
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", qg, k).astype(jnp.float32) * scale
+    if causal:
+        qi = jnp.arange(sq)[:, None] + q_offset
+        ki = jnp.arange(sk)[None, :]
+        scores = jnp.where(ki <= qi, scores, -1e30)
+    if kv_len is not None:
+        ki = jnp.arange(sk).reshape(1, 1, 1, 1, sk)
+        scores = jnp.where(ki < kv_len.reshape(b, 1, 1, 1, 1), scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    o = jnp.einsum("bkgqs,bskd->bqkgd", w, v)
+    return o.reshape(b, sq, h, d)
+
+
+def sdpa_gqa_chunked(
+    q, k, v, *, causal: bool, q_offset=0, kv_len=None, chunk: int = 512
+) -> jax.Array:
+    """Blockwise (flash-style) attention: online softmax over KV chunks.
+
+    The [Sq, Sk] score matrix never materializes — the dry-run showed it is
+    both the dominant HBM traffic AND the source of TB-scale involuntary
+    all-gathers in the backward (GSPMD cannot reshard the giant score tensor
+    between the differently-sharded fwd/bwd dots).  Per chunk we expand KV to
+    the full (padded) head count, so every tensor stays head-sharded over the
+    model axis — no resharding, and the expansion lives only at chunk scale.
+
+    q: [B, Sq, H, D]; k/v: [B, Sk, KV, D]. Returns [B, Sq, H, D].
+    """
+    b, sq, h, d = q.shape
+    sk, kvh = k.shape[1], k.shape[2]
+    scale = 1.0 / math.sqrt(d)
+    chunk = min(chunk, sk)
+    n_chunks = -(-sk // chunk)
+    pad = n_chunks * chunk - sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    mapping = (jnp.arange(h) * kvh) // h if h % kvh else None
+    kc = k.reshape(b, n_chunks, chunk, kvh, d)
+    vc = v.reshape(b, n_chunks, chunk, kvh, d)
+    qi = jnp.arange(sq)[:, None] + q_offset  # [Sq,1]
+    f32 = jnp.float32
+
+    def body(carry, xs):
+        m, l, acc = carry  # [B,H,Sq], [B,H,Sq], [B,Sq,H,D] (f32)
+        kx, vx, ci = xs  # [B,chunk,KV,D], [B,chunk,KV,D], scalar chunk idx
+        if mapping is not None:
+            kx = jnp.take(kx, mapping, axis=2)
+            vx = jnp.take(vx, mapping, axis=2)
+        elif h != kvh:
+            kx = jnp.repeat(kx, h // kvh, axis=2)
+            vx = jnp.repeat(vx, h // kvh, axis=2)
+        kx = shd(kx, "act_batch", None, "act_heads", None)
+        s = jnp.einsum("bqhd,bchd->bhqc", q, kx).astype(f32) * scale
+        kpos = ci * chunk + jnp.arange(chunk)[None, :]  # [1,chunk]
+        valid = jnp.ones((sq, chunk), bool) if not causal else (kpos <= qi)
+        valid = valid & (kpos < sk)
+        if kv_len is not None:
+            valid = valid[None] & (kpos[None] < kv_len[:, None, None])
+            s = jnp.where(valid[:, None], s, -1e30)
+        else:
+            s = jnp.where(valid[None, None], s, -1e30)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])  # [B,H,Sq,chunk] f32
+        alpha = jnp.exp(m - m_new)  # [B,H,Sq]
+        l_new = alpha * l + p.sum(axis=-1)
+        pv = jnp.einsum("bhqc,bchd->bqhd", p.astype(vx.dtype), vx).astype(f32)
+        acc_new = acc * alpha.transpose(0, 2, 1)[..., None] + pv
+        return (m_new, l_new, acc_new), None
+
+    carry0 = (
+        jnp.full((b, h, sq), -1e30, f32),
+        jnp.zeros((b, h, sq), f32),
+        jnp.zeros((b, sq, h, d), f32),
+    )
+    xs = (
+        jnp.moveaxis(kc, 1, 0),
+        jnp.moveaxis(vc, 1, 0),
+        jnp.arange(n_chunks),
+    )
+    # checkpoint the body: backward recomputes per-chunk scores instead of
+    # stashing them (the whole point of going blockwise)
+    (m, l, acc), _ = jax.lax.scan(jax.checkpoint(body), carry0, xs)
+    out = acc / jnp.maximum(l, 1e-30).transpose(0, 2, 1)[..., None]
+    return out.astype(q.dtype)
+
+
+def attn_apply(
+    params,
+    cfg: ModelConfig,
+    x: jax.Array,
+    *,
+    positions: jax.Array,
+    causal: bool = True,
+    mrope_positions: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Full self-attention (training / prefill without cache)."""
+    b, s, _ = x.shape
+    q, k, v = _qkv(params, cfg, x, positions, mrope_positions)
+    q = shd(q, "act_batch", None, "act_heads", None)
+    k = shd(k, "act_batch", None, "act_kv_heads", None)
+    if cfg.attn_impl == "pallas":
+        from repro.kernels.flash_attn import flash_attention
+
+        o = flash_attention(q, k, v, causal=causal)
+    elif cfg.attn_impl == "chunked" and s > cfg.attn_chunk:
+        o = sdpa_gqa_chunked(q, k, v, causal=causal, chunk=cfg.attn_chunk)
+    else:
+        o = sdpa_gqa(q, k, v, causal=causal)
+    o = o.reshape(b, s, -1)
+    return linear_apply(params["o"], o)
+
+
+# ---------------------------------------------------------------------------
+# Cross attention (whisper decoder)
+# ---------------------------------------------------------------------------
+
+
+def cross_attn_apply(params, cfg: ModelConfig, x: jax.Array, enc_kv) -> jax.Array:
+    """x [B,Sq,d]; enc_kv = (k, v) precomputed from encoder output (no RoPE)."""
+    b, s, _ = x.shape
+    hd = cfg.resolved_head_dim
+    q = linear_apply(params["q"], x).reshape(b, s, cfg.padded_heads, hd)
+    k, v = enc_kv
+    o = sdpa_gqa(q, k, v, causal=False).reshape(b, s, -1)
+    return linear_apply(params["o"], o)
+
+
+def cross_kv(params, cfg: ModelConfig, enc_out: jax.Array):
+    b, s, _ = enc_out.shape
+    hd = cfg.resolved_head_dim
+    k = linear_apply(params["k"], enc_out).reshape(b, s, cfg.n_kv_heads, hd)
+    v = linear_apply(params["v"], enc_out).reshape(b, s, cfg.n_kv_heads, hd)
+    return k, v
+
+
+# ---------------------------------------------------------------------------
+# KV cache (decode)
+# ---------------------------------------------------------------------------
+
+
+def cache_init(cfg: ModelConfig, batch: int, max_len: int, n_layers: int, dtype):
+    kv, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    shape = (n_layers, batch, max_len, kv, hd)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def cache_spec_names():
+    """Logical names per cache dim [L, B, S, KV, D]."""
+    return (None, "act_batch", "act_kv_seq", "act_kv_heads", None)
+
+
+def attn_decode(
+    params,
+    cfg: ModelConfig,
+    x: jax.Array,
+    layer_cache: Tuple[jax.Array, jax.Array],
+    *,
+    pos: jax.Array,
+    mrope_positions: Optional[jax.Array] = None,
+):
+    """One-token decode against a READ-ONLY cache slice.
+
+    x [B, 1, d]; layer_cache (k, v): [B, S_max, KV, D]; pos: scalar int32.
+    Returns (out, (k_new [B,1,KV,D], v_new)) — the caller writes the new
+    token into the stacked cache with ONE batched dynamic-update-slice after
+    the layer scan.  Updating inside the scan made XLA stack a full cache
+    copy per layer as scan outputs (2 x 7 TB/chip/token measured on
+    qwen2-vl-72b decode_32k; EXPERIMENTS §Perf iteration J).
+
+    Attention = online-softmax combine of (cache positions < pos) with the
+    new token at pos — identical math to write-then-attend(pos+1).
+    """
+    b = x.shape[0]
+    positions = jnp.broadcast_to(pos.reshape(1, 1), (b, 1))
+    q, k_new, v_new = _qkv(params, cfg, x, positions, mrope_positions)
+    kc, vc = layer_cache
+    h = q.shape[2]
+    kvh = kc.shape[2]
+    d = q.shape[3]
+    scale = 1.0 / math.sqrt(d)
+    f32 = jnp.float32
+
+    if h % kvh == 0:
+        g = h // kvh
+        qg = q.reshape(b, 1, kvh, g, d)
+        s_c = jnp.einsum("bqkgd,bskd->bkgqs", qg, kc.astype(q.dtype)).astype(f32) * scale
+        ki = jnp.arange(kc.shape[1]).reshape(1, 1, 1, 1, -1)
+        s_c = jnp.where(ki < pos, s_c, -1e30)  # only written history
+        s_n = jnp.einsum("bqkgd,bskd->bkgqs", qg, k_new.astype(q.dtype)).astype(f32) * scale
+        s = jnp.concatenate([s_c, s_n], axis=-1)
+        w = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+        o = jnp.einsum("bkgqs,bskd->bqkgd", w[..., :-1], vc.astype(q.dtype))
+        o = o + w[..., -1:].transpose(0, 3, 1, 2, 4) * v_new[:, :, :, None, :]
+        o = o.reshape(b, 1, h, d)
+    else:
+        kx = _expand_kv(kc, h).astype(q.dtype)
+        vx = _expand_kv(vc, h).astype(q.dtype)
+        s_c = jnp.einsum("bqhd,bshd->bhqs", q, kx).astype(f32) * scale
+        ki = jnp.arange(kc.shape[1]).reshape(1, 1, 1, -1)
+        s_c = jnp.where(ki < pos, s_c, -1e30)
+        kn = _expand_kv(k_new, h).astype(q.dtype)
+        vn = _expand_kv(v_new, h).astype(q.dtype)
+        s_n = jnp.einsum("bqhd,bshd->bhqs", q, kn).astype(f32) * scale
+        s = jnp.concatenate([s_c, s_n], axis=-1)
+        w = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+        o = jnp.einsum("bhqs,bshd->bqhd", w[..., :-1], vx)
+        o = o + jnp.einsum("bhqs,bshd->bqhd", w[..., -1:], vn)
+    o = o.reshape(b, 1, -1)
+    return linear_apply(params["o"], o), (k_new, v_new)
+
+
+def cache_write(cache_k, cache_v, k_news, v_news, pos):
+    """One batched in-place write of the step's new K/V into the stacked
+    cache. cache_*: [L, B, S, KV, D]; *_news: [L, B, 1, KV, D]."""
+    zero = jnp.zeros((), jnp.int32)
+    idx = (zero, zero, pos, zero, zero)
+    k2 = jax.lax.dynamic_update_slice(cache_k, k_news.astype(cache_k.dtype), idx)
+    v2 = jax.lax.dynamic_update_slice(cache_v, v_news.astype(cache_v.dtype), idx)
+    return k2, v2

@@ -1,0 +1,112 @@
+"""Shared model components: norms, RoPE (incl. M-RoPE), embeddings."""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.sparse_linear import Boxed
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def norm_init(d: int, kind: str, dtype=jnp.float32):
+    p = {"scale": Boxed(jnp.ones((d,), dtype), (None,))}
+    if kind == "layernorm":
+        p["bias"] = Boxed(jnp.zeros((d,), dtype), (None,))
+    return p
+
+
+def norm_apply(params, x: jax.Array, kind: str, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    if kind == "layernorm":
+        mu = xf.mean(-1, keepdims=True)
+        var = ((xf - mu) ** 2).mean(-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+        y = y * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)
+    else:  # rmsnorm
+        var = (xf * xf).mean(-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(var + eps) * params["scale"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE / M-RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float) -> np.ndarray:
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2, dtype=np.float32) / head_dim))
+
+
+def rope_cos_sin(positions: jax.Array, head_dim: int, theta: float):
+    """positions [..., S] -> cos/sin [..., S, head_dim//2] (float32)."""
+    freqs = jnp.asarray(rope_freqs(head_dim, theta))
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x [B, S, H, D]; cos/sin [B, S, D/2] (broadcast over heads).
+
+    Rotates pairs (x[..., :D/2], x[..., D/2:]) — the 'NeoX' convention used by
+    the Llama/Qwen family.
+    """
+    d2 = x.shape[-1] // 2
+    x1, x2 = x[..., :d2], x[..., d2:]
+    cos = cos[:, :, None, :]
+    sin = sin[:, :, None, :]
+    x1f, x2f = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate(
+        [x1f * cos - x2f * sin, x2f * cos + x1f * sin], axis=-1
+    ).astype(x.dtype)
+
+
+def mrope_cos_sin(
+    positions_3: jax.Array, head_dim: int, theta: float, sections: Tuple[int, ...]
+):
+    """Qwen2-VL multimodal RoPE. positions_3: [B, 3, S] (temporal, h, w).
+
+    The head_dim/2 frequency slots are partitioned into ``sections`` (summing
+    to head_dim/2); each section takes its rotation angle from the matching
+    position component. Text tokens carry identical components, reducing to
+    1-D RoPE exactly.
+    """
+    assert sum(sections) == head_dim // 2, (sections, head_dim)
+    freqs = jnp.asarray(rope_freqs(head_dim, theta))  # [D/2]
+    ang = positions_3.astype(jnp.float32)[..., None] * freqs  # [B, 3, S, D/2]
+    section_id = np.repeat(np.arange(len(sections)), sections)  # [D/2]
+    onehot = jnp.asarray(
+        np.eye(len(sections), dtype=np.float32)[section_id].T
+    )  # [3, D/2]
+    ang_sel = jnp.einsum("bksf,kf->bsf", ang, onehot)  # pick component per slot
+    return jnp.cos(ang_sel), jnp.sin(ang_sel)
+
+
+def sinusoidal_positions(n: int, d: int) -> np.ndarray:
+    """Whisper-style fixed sinusoidal embeddings [n, d]."""
+    pos = np.arange(n)[:, None]
+    dim = np.arange(d // 2)[None, :]
+    inv = np.exp(-math.log(10000.0) * dim / max(d // 2 - 1, 1))
+    ang = pos * inv
+    return np.concatenate([np.sin(ang), np.cos(ang)], axis=1).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# Embeddings
+# ---------------------------------------------------------------------------
+
+
+def embed_init(key, vocab: int, d: int, dtype=jnp.float32):
+    e = jax.random.normal(key, (vocab, d), dtype) * 0.02
+    return Boxed(e, ("vocab", "embed"))
+
+
+def embed_lookup(table: jax.Array, ids: jax.Array) -> jax.Array:
+    return jnp.take(table, ids, axis=0)

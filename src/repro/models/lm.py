@@ -1,0 +1,403 @@
+"""Top-level language models for every family in the zoo.
+
+A single init/apply pair covers:
+  - dense / MoE / VLM transformers ("attn" pattern): scan over stacked blocks
+  - xLSTM ("xlstm" pattern): scan over superblocks of (slstm_every-1) mLSTM
+    blocks followed by one sLSTM block
+  - Zamba2 hybrid ("mamba_shared_attn"): scan over superblocks of
+    shared_attn_every Mamba2 blocks followed by one application of the
+    *shared* attention block (one set of weights, 'layers//every' KV caches)
+
+Training entry point: ``loss_fn``; serving entry points: ``prefill`` and
+``decode_step`` (single new token against a KV/state cache).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.sparse_linear import Boxed, box_map, unbox_tree
+from repro.models import attention as attn_mod
+from repro.models import ssm as ssm_mod
+from repro.models import xlstm as xlstm_mod
+from repro.models.blocks import (
+    block_apply,
+    block_decode,
+    block_init,
+    shared_block_apply,
+    shared_block_decode,
+    shared_block_init,
+    stack_init,
+)
+from repro.models.common import embed_init, embed_lookup, norm_apply, norm_init
+from repro.sharding import shd
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+
+def lm_init(cfg: ModelConfig, key) -> Dict[str, Any]:
+    ks = jax.random.split(key, 8)
+    dtype = jnp.dtype(cfg.param_dtype)
+    p: Dict[str, Any] = {
+        "embed": embed_init(ks[0], cfg.padded_vocab, cfg.d_model, dtype),
+        "final_norm": norm_init(cfg.d_model, cfg.norm, dtype),
+    }
+    if not cfg.tie_embeddings:
+        p["unembed"] = Boxed(
+            jax.random.normal(ks[1], (cfg.d_model, cfg.padded_vocab), dtype) * 0.02,
+            ("embed", "vocab"),
+        )
+    pat = cfg.block_pattern
+    if pat == "attn":
+        p["layers"] = stack_init(lambda k: block_init(k, cfg), ks[2], cfg.n_layers)
+    elif pat == "xlstm":
+        every = cfg.slstm_every
+        assert cfg.n_layers % every == 0, "xlstm: n_layers % slstm_every == 0"
+        n_super = cfg.n_layers // every
+        p["mlstm"] = stack_init(
+            lambda k: stack_init(lambda k2: xlstm_mod.mlstm_init(k2, cfg), k, every - 1),
+            ks[2],
+            n_super,
+        )
+        p["slstm"] = stack_init(lambda k: xlstm_mod.slstm_init(k, cfg), ks[3], n_super)
+    elif pat == "mamba_shared_attn":
+        every = cfg.shared_attn_every
+        n_super = cfg.n_layers // every
+        rem = cfg.n_layers - n_super * every
+        p["mamba"] = stack_init(
+            lambda k: stack_init(lambda k2: ssm_mod.mamba_init(k2, cfg), k, every),
+            ks[2],
+            n_super,
+        )
+        if rem:
+            p["mamba_tail"] = stack_init(lambda k: ssm_mod.mamba_init(k, cfg), ks[4], rem)
+        p["shared"] = shared_block_init(ks[3], cfg)
+    else:
+        raise ValueError(f"unknown block_pattern {pat}")
+    return p
+
+
+def n_shared_applications(cfg: ModelConfig) -> int:
+    return cfg.n_layers // cfg.shared_attn_every
+
+
+# ---------------------------------------------------------------------------
+# Forward (training / scoring)
+# ---------------------------------------------------------------------------
+
+
+def _embed_tokens(params, cfg: ModelConfig, batch) -> jax.Array:
+    h = embed_lookup(params["embed"], batch["tokens"]).astype(jnp.dtype(cfg.dtype))
+    if cfg.family == "vlm" and "vision_embeds" in batch:
+        b = h.shape[0]
+        ve = batch["vision_embeds"].astype(h.dtype)
+        h = h.at[jnp.arange(b)[:, None], batch["vision_pos"]].set(ve)
+    return shd(h, "act_batch", "act_seq_sp", None)
+
+
+def _maybe_remat(fn, cfg: ModelConfig):
+    if cfg.remat:
+        policy = (jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+                  if cfg.remat_policy == "dots"
+                  else jax.checkpoint_policies.nothing_saveable)
+        return jax.checkpoint(fn, policy=policy)
+    return fn
+
+
+def lm_forward(params, cfg: ModelConfig, batch) -> Tuple[jax.Array, jax.Array]:
+    """Returns (logits [B,S,V_padded], aux_loss)."""
+    h = _embed_tokens(params, cfg, batch)
+    b, s = batch["tokens"].shape
+    positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+    mrope_positions = batch.get("mrope_positions") if cfg.mrope else None
+    pat = cfg.block_pattern
+    aux = jnp.zeros((), jnp.float32)
+
+    if pat == "attn":
+        def body(carry, layer_params):
+            hh, = carry
+            hh, a = block_apply(layer_params, cfg, hh, positions=positions,
+                                mrope_positions=mrope_positions)
+            return (hh,), a
+
+        (h,), auxs = jax.lax.scan(_maybe_remat(body, cfg), (h,), params["layers"])
+        aux = auxs.mean()
+    elif pat == "xlstm":
+        def super_body(carry, sp):
+            hh, = carry
+            mp, sp_params = sp
+
+            def inner(c2, lp):
+                (h2,) = c2
+                h2 = h2 + xlstm_mod.mlstm_apply(lp, cfg, h2)
+                h2 = shd(h2, "act_batch", "act_seq_sp", None)
+                return (h2,), jnp.zeros(())
+
+            (hh,), _ = jax.lax.scan(inner, (hh,), mp)
+            hh = hh + xlstm_mod.slstm_apply(sp_params, cfg, hh)
+            hh = shd(hh, "act_batch", "act_seq_sp", None)
+            return (hh,), jnp.zeros(())
+
+        (h,), _ = jax.lax.scan(
+            _maybe_remat(super_body, cfg), (h,), (params["mlstm"], params["slstm"])
+        )
+    elif pat == "mamba_shared_attn":
+        h0 = h
+
+        def super_body(carry, mp):
+            hh, = carry
+
+            def inner(c2, lp):
+                (h2,) = c2
+                h2 = h2 + ssm_mod.mamba_apply(lp, cfg, h2)
+                h2 = shd(h2, "act_batch", "act_seq_sp", None)
+                return (h2,), jnp.zeros(())
+
+            (hh,), _ = jax.lax.scan(inner, (hh,), mp)
+            hh = shared_block_apply(params["shared"], cfg, hh, h0, positions=positions)
+            hh = shd(hh, "act_batch", "act_seq_sp", None)
+            return (hh,), jnp.zeros(())
+
+        (h,), _ = jax.lax.scan(_maybe_remat(super_body, cfg), (h,), params["mamba"])
+        if "mamba_tail" in params:
+            def tail(c2, lp):
+                (h2,) = c2
+                h2 = h2 + ssm_mod.mamba_apply(lp, cfg, h2)
+                return (h2,), jnp.zeros(())
+
+            (h,), _ = jax.lax.scan(_maybe_remat(tail, cfg), (h,), params["mamba_tail"])
+    else:
+        raise ValueError(pat)
+
+    h = norm_apply(params["final_norm"], h, cfg.norm)
+    logits = _unembed(params, cfg, h)
+    return logits, aux
+
+
+def _unembed(params, cfg: ModelConfig, h) -> jax.Array:
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", h, params["embed"].astype(h.dtype))
+    else:
+        logits = h @ params["unembed"].astype(h.dtype)
+    return shd(logits, "act_batch", None, "act_vocab")
+
+
+def loss_fn(params, cfg: ModelConfig, batch, aux_weight: float = 0.01):
+    """Next-token cross-entropy (+ MoE load-balance aux)."""
+    logits, aux = lm_forward(params, cfg, batch)
+    logits = logits[:, :-1].astype(jnp.float32)
+    labels = batch["tokens"][:, 1:]
+    # padded vocab ids can never appear as labels; mask them out of the
+    # softmax so padding does not leak probability mass
+    if cfg.padded_vocab != cfg.vocab_size:
+        neg = jnp.full((cfg.padded_vocab - cfg.vocab_size,), -1e30, jnp.float32)
+        logits = logits.at[..., cfg.vocab_size:].set(neg)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = (logz - gold).mean()
+    return nll + aux_weight * aux, {"nll": nll, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# Serving: prefill + decode
+# ---------------------------------------------------------------------------
+
+
+def cache_init(cfg: ModelConfig, batch: int, max_len: int):
+    """Family-specific decode cache (all leaves are jnp arrays)."""
+    dtype = jnp.dtype(cfg.dtype)
+    pat = cfg.block_pattern
+    if pat == "attn":
+        return attn_mod.cache_init(cfg, batch, max_len, cfg.n_layers, dtype)
+    if pat == "xlstm":
+        every = cfg.slstm_every
+        n_super = cfg.n_layers // every
+
+        def stack(fn, n):
+            return jax.tree_util.tree_map(
+                lambda x: jnp.broadcast_to(x, (n,) + x.shape), fn
+            )
+
+        m1 = xlstm_mod.mlstm_cache_init(cfg, batch)
+        s1 = xlstm_mod.slstm_cache_init(cfg, batch)
+        return {
+            "mlstm": jax.tree_util.tree_map(
+                lambda x: jnp.zeros((n_super, every - 1) + x.shape, x.dtype), m1
+            ),
+            "slstm": jax.tree_util.tree_map(
+                lambda x: jnp.zeros((n_super,) + x.shape, x.dtype), s1
+            ),
+        }
+    if pat == "mamba_shared_attn":
+        every = cfg.shared_attn_every
+        n_super = cfg.n_layers // every
+        rem = cfg.n_layers - n_super * every
+        m1 = ssm_mod.mamba_cache_init(cfg, batch, dtype)
+        out = {
+            "mamba": jax.tree_util.tree_map(
+                lambda x: jnp.zeros((n_super, every) + x.shape, x.dtype), m1
+            ),
+            "shared_kv": attn_mod.cache_init(cfg, batch, max_len, n_super, dtype),
+        }
+        if rem:
+            out["mamba_tail"] = jax.tree_util.tree_map(
+                lambda x: jnp.zeros((rem,) + x.shape, x.dtype), m1
+            )
+        return out
+    raise ValueError(pat)
+
+
+def decode_step(params, cfg: ModelConfig, cache, tokens: jax.Array, pos: jax.Array):
+    """One decode step. tokens [B,1]; pos scalar int32 (current length).
+
+    Returns (logits [B,1,V], new_cache).
+    """
+    h = embed_lookup(params["embed"], tokens).astype(jnp.dtype(cfg.dtype))
+    b = tokens.shape[0]
+    pat = cfg.block_pattern
+    mrope_positions = None
+    if cfg.mrope:
+        mrope_positions = jnp.broadcast_to(pos.reshape(1, 1, 1), (b, 3, 1))
+
+    if pat == "attn":
+        def body(carry, xs):
+            hh, = carry
+            lp, kc, vc = xs
+            hh, (kn, vn) = block_decode(lp, cfg, hh, (kc, vc), pos=pos,
+                                        mrope_positions=mrope_positions)
+            return (hh,), (kn, vn)
+
+        (h,), (k_news, v_news) = jax.lax.scan(
+            body, (h,), (params["layers"], cache["k"], cache["v"])
+        )
+        k2, v2 = attn_mod.cache_write(cache["k"], cache["v"], k_news, v_news, pos)
+        new_cache = {"k": k2, "v": v2}
+    elif pat == "xlstm":
+        def super_body(carry, xs):
+            hh, = carry
+            mp, sp_params, mcache, scache = xs
+
+            def inner(c2, xs2):
+                (h2,) = c2
+                lp, lc = xs2
+                dh, nc = xlstm_mod.mlstm_decode(lp, cfg, h2, lc)
+                return (h2 + dh,), nc
+
+            (hh,), m_new = jax.lax.scan(inner, (hh,), (mp, mcache))
+            dh, s_new = xlstm_mod.slstm_decode(sp_params, cfg, hh, scache)
+            return (hh + dh,), (m_new, s_new)
+
+        (h,), (m_new, s_new) = jax.lax.scan(
+            super_body, (h,),
+            (params["mlstm"], params["slstm"], cache["mlstm"], cache["slstm"]),
+        )
+        new_cache = {"mlstm": m_new, "slstm": s_new}
+    elif pat == "mamba_shared_attn":
+        h0 = h
+
+        def super_body(carry, xs):
+            hh, = carry
+            mp, mcache, kc, vc = xs
+
+            def inner(c2, xs2):
+                (h2,) = c2
+                lp, lc = xs2
+                dh, nc = ssm_mod.mamba_decode(lp, cfg, h2, lc)
+                return (h2 + dh,), nc
+
+            (hh,), m_new = jax.lax.scan(inner, (hh,), (mp, mcache))
+            hh, (kn, vn) = shared_block_decode(
+                params["shared"], cfg, hh, h0, (kc, vc), pos=pos
+            )
+            return (hh,), (m_new, kn, vn)
+
+        (h,), (m_new, k_news, v_news) = jax.lax.scan(
+            super_body, (h,),
+            (params["mamba"], cache["mamba"], cache["shared_kv"]["k"],
+             cache["shared_kv"]["v"]),
+        )
+        k2, v2 = attn_mod.cache_write(cache["shared_kv"]["k"], cache["shared_kv"]["v"],
+                                      k_news, v_news, pos)
+        new_cache = {"mamba": m_new, "shared_kv": {"k": k2, "v": v2}}
+        if "mamba_tail" in params:
+            def tail(c2, xs2):
+                (h2,) = c2
+                lp, lc = xs2
+                dh, nc = ssm_mod.mamba_decode(lp, cfg, h2, lc)
+                return (h2 + dh,), nc
+
+            (h,), t_new = jax.lax.scan(tail, (h,), (params["mamba_tail"], cache["mamba_tail"]))
+            new_cache["mamba_tail"] = t_new
+    else:
+        raise ValueError(pat)
+
+    h = norm_apply(params["final_norm"], h, cfg.norm)
+    logits = _unembed(params, cfg, h)
+    return logits, new_cache
+
+
+def prefill(params, cfg: ModelConfig, tokens: jax.Array):
+    """Process a prompt, returning (last-token logits, populated cache).
+
+    For attention archs the per-layer K/V come out of the scan as ys; for
+    recurrent archs prefill is decode run over the prompt — for the dry-run
+    shapes we instead run the chunked parallel forward and only materialize
+    the final state, which is what a production prefill would do.
+    """
+    b, s = tokens.shape
+    batch = {"tokens": tokens}
+    if cfg.mrope:
+        pos3 = jnp.broadcast_to(jnp.arange(s)[None, None, :], (b, 3, s))
+        batch["mrope_positions"] = pos3
+    pat = cfg.block_pattern
+    h = _embed_tokens(params, cfg, batch)
+    positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+
+    if pat == "attn":
+        def body(carry, lp):
+            hh, = carry
+            x = norm_apply(lp["ln1"], hh, cfg.norm)
+            q, k, v = attn_mod._qkv(lp["attn"], cfg, x,
+                                    positions, batch.get("mrope_positions"))
+            if cfg.attn_impl == "chunked" and s > cfg.attn_chunk:
+                o = attn_mod.sdpa_gqa_chunked(q, k, v, causal=True,
+                                              chunk=cfg.attn_chunk)
+            else:
+                o = attn_mod.sdpa_gqa(q, k, v, causal=True)
+            from repro.core.sparse_linear import linear_apply as _la
+
+            hh = hh + _la(lp["attn"]["o"], o.reshape(b, s, -1))
+            x = norm_apply(lp["ln2"], hh, cfg.norm)
+            if cfg.is_moe:
+                if cfg.moe_impl == "shard_map":
+                    from repro.models.moe import moe_apply_shard_map as _moe
+                else:
+                    from repro.models.moe import moe_apply as _moe
+
+                y, _ = _moe(lp["moe"], cfg, x)
+            else:
+                from repro.models.mlp import mlp_apply
+
+                y = mlp_apply(lp["mlp"], cfg, x)
+            hh = hh + y
+            hh = shd(hh, "act_batch", "act_seq_sp", None)
+            return (hh,), (k, v)
+
+        (h,), (ks, vs) = jax.lax.scan(_maybe_remat(body, cfg), (h,), params["layers"])
+        cache = {"k": ks, "v": vs}  # [L, B, S, KV, D]
+    else:
+        # recurrent/hybrid prefill: run the parallel forward; dry-run cells
+        # exercise decode_step for state-cache serving.
+        logits, _ = lm_forward(params, cfg, batch)
+        return logits[:, -1:], None
+
+    h = norm_apply(params["final_norm"], h, cfg.norm)
+    logits = _unembed(params, cfg, h)
+    return logits[:, -1:], cache

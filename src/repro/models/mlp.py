@@ -1,0 +1,39 @@
+"""MLP variants over SparseLinear: SwiGLU (llama/qwen family), squared-ReLU
+(nemotron), GELU (whisper)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.sparse_linear import linear_apply, linear_init
+from repro.sharding import shd
+
+
+def mlp_init(key, cfg: ModelConfig, d_ff=None):
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    scfg = cfg.sparsity
+    dtype = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 3)
+    p = {}
+    if cfg.mlp_act == "swiglu":
+        p["gate"] = linear_init(ks[0], d, f, scfg, dtype=dtype, in_ax="embed", out_ax="ffn")
+        p["up"] = linear_init(ks[1], d, f, scfg, dtype=dtype, in_ax="embed", out_ax="ffn")
+    else:
+        p["up"] = linear_init(ks[1], d, f, scfg, dtype=dtype, in_ax="embed", out_ax="ffn")
+    p["down"] = linear_init(ks[2], f, d, scfg, dtype=dtype, in_ax="ffn", out_ax="embed",
+                            mode="reduce")
+    return p
+
+
+def mlp_apply(params, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    if cfg.mlp_act == "swiglu":
+        g = linear_apply(params["gate"], x)
+        u = linear_apply(params["up"], x)
+        h = jax.nn.silu(g) * u
+    elif cfg.mlp_act == "sq_relu":
+        h = jnp.square(jax.nn.relu(linear_apply(params["up"], x)))
+    else:  # gelu
+        h = jax.nn.gelu(linear_apply(params["up"], x), approximate=True)
+    h = shd(h, "act_batch", None, "act_ffn")
+    return linear_apply(params["down"], h)

@@ -1,0 +1,176 @@
+"""Mamba2 (SSD) block — chunked parallel scan for training/prefill, O(1)
+recurrent state update for decode.  Used by zamba2-7b.
+
+State-space: per head h with head-dim p and state-dim N,
+  S_t = a_t * S_{t-1} + dt_t * x_t ⊗ B_t      (a_t = exp(dt_t * A_h), A_h < 0)
+  y_t = C_t · S_t + D_h * x_t
+
+The chunked form computes, per chunk of Q tokens, an intra-chunk quadratic
+(attention-like) term plus the carried-state contribution, with the carry
+updated once per chunk — sequential only over n_chunks (lax.scan).
+All decays are exp of non-positive numbers => numerically stable.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.sparse_linear import Boxed, linear_apply, linear_init
+from repro.models.common import norm_apply, norm_init
+from repro.sharding import shd
+
+
+def mamba_dims(cfg: ModelConfig):
+    d_inner = cfg.expand * cfg.d_model
+    n_heads = d_inner // cfg.ssm_head_dim
+    return d_inner, n_heads, cfg.ssm_state
+
+
+def mamba_init(key, cfg: ModelConfig):
+    d = cfg.d_model
+    di, nh, ns = mamba_dims(cfg)
+    conv_ch = di + 2 * ns
+    ks = jax.random.split(key, 5)
+    dtype = jnp.dtype(cfg.param_dtype)
+    d_in_proj = 2 * di + 2 * ns + nh  # z, x, B, C, dt
+    p = {
+        "in_proj": linear_init(ks[0], d, d_in_proj, cfg.sparsity, dtype=dtype,
+                               in_ax="embed", out_ax="ffn"),
+        "out_proj": linear_init(ks[1], di, d, cfg.sparsity, dtype=dtype,
+                                in_ax="ffn", out_ax="embed", mode="reduce"),
+        "conv_w": Boxed(
+            jax.random.normal(ks[2], (cfg.d_conv, conv_ch), dtype) * 0.1,
+            (None, "ffn"),
+        ),
+        "conv_b": Boxed(jnp.zeros((conv_ch,), dtype), ("ffn",)),
+        "A_log": Boxed(jnp.log(jnp.linspace(1.0, 16.0, nh)), (None,)),
+        "D": Boxed(jnp.ones((nh,)), (None,)),
+        "dt_bias": Boxed(jnp.zeros((nh,)), (None,)),
+        "norm": norm_init(di, "rmsnorm", dtype),
+    }
+    return p
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv along S. x [B,S,C]; w [K,C]."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(
+        xp[:, i : i + x.shape[1], :] * w[i][None, None, :] for i in range(k)
+    )
+    return out + b[None, None, :]
+
+
+def _split_proj(cfg: ModelConfig, zxbcdt: jax.Array):
+    di, nh, ns = mamba_dims(cfg)
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di : 2 * di + 2 * ns]
+    dt = zxbcdt[..., 2 * di + 2 * ns :]
+    return z, xbc, dt
+
+
+def mamba_apply(params, cfg: ModelConfig, hidden: jax.Array) -> jax.Array:
+    """Training / prefill forward. hidden [B, S, d_model]."""
+    b, s, _ = hidden.shape
+    di, nh, ns = mamba_dims(cfg)
+    p = cfg.ssm_head_dim
+    q = min(cfg.ssm_chunk, s)
+    while s % q != 0:
+        q -= 1
+    nc = s // q
+
+    zxbcdt = linear_apply(params["in_proj"], hidden)
+    z, xbc, dt = _split_proj(cfg, zxbcdt)
+    xbc = _causal_conv(jax.nn.silu(xbc), params["conv_w"], params["conv_b"])
+    x = xbc[..., :di].reshape(b, s, nh, p)
+    bm = xbc[..., di : di + ns]  # [B,S,N]
+    cm = xbc[..., di + ns :]  # [B,S,N]
+
+    a_neg = -jnp.exp(params["A_log"].astype(jnp.float32))  # [H] < 0
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # [B,S,H]
+    log_a = dt * a_neg[None, None, :]  # [B,S,H] <= 0
+
+    # chunked shapes
+    xc = x.reshape(b, nc, q, nh, p).astype(jnp.float32)
+    bc = bm.reshape(b, nc, q, ns).astype(jnp.float32)
+    cc = cm.reshape(b, nc, q, ns).astype(jnp.float32)
+    dtc = dt.reshape(b, nc, q, nh)
+    lac = log_a.reshape(b, nc, q, nh)
+
+    def chunk_step(state, inputs):
+        xq, bq, cq, dtq, laq = inputs  # [B,Q,...]
+        g = jnp.cumsum(laq, axis=1)  # [B,Q,H] cumulative log-decay
+        # carried-state contribution: y_state[i] = exp(g_i) * C_i . S
+        y_state = jnp.einsum("bqn,bhpn->bqhp", cq, state) * jnp.exp(g)[..., None]
+        # intra-chunk: L[i,j] = exp(g_i - g_j) for j<=i
+        gi = g[:, :, None, :]  # [B,Q,1,H]
+        gj = g[:, None, :, :]  # [B,1,Q,H]
+        mask = (jnp.arange(q)[:, None] >= jnp.arange(q)[None, :])[None, :, :, None]
+        # mask the exponent (not the exp) — exp of a masked-out large positive
+        # delta would overflow and poison the backward pass with inf*0=NaN
+        L = jnp.exp(jnp.where(mask, gi - gj, -1e30))  # [B,Q,Q,H]
+        scores = jnp.einsum("bin,bjn->bij", cq, bq)  # [B,Q,Q]
+        G = scores[..., None] * L * dtq[:, None, :, :]  # weight on x_j
+        y_intra = jnp.einsum("bijh,bjhp->bihp", G, xq)
+        # carry update
+        decay_chunk = jnp.exp(g[:, -1:, :] - g)  # exp(g_Q - g_j) [B,Q,H]
+        s_new = jnp.exp(g[:, -1, :])[:, :, None, None] * state + jnp.einsum(
+            "bjh,bjhp,bjn->bhpn", decay_chunk * dtq, xq, bq
+        )
+        return s_new, y_state + y_intra
+
+    s0 = jnp.zeros((b, nh, p, ns), jnp.float32)
+    inputs = tuple(jnp.moveaxis(t, 1, 0) for t in (xc, bc, cc, dtc, lac))
+    _, ys = jax.lax.scan(chunk_step, s0, inputs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, s, nh, p)  # [B,S,H,p]
+    y = y + params["D"][None, None, :, None] * x.astype(jnp.float32)
+    y = y.reshape(b, s, di).astype(hidden.dtype)
+    y = norm_apply(params["norm"], y * jax.nn.silu(z), "rmsnorm")
+    return linear_apply(params["out_proj"], y)
+
+
+# ---------------------------------------------------------------------------
+# Decode (single-token recurrence)
+# ---------------------------------------------------------------------------
+
+
+def mamba_cache_init(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    di, nh, ns = mamba_dims(cfg)
+    return {
+        "ssm": jnp.zeros((batch, nh, cfg.ssm_head_dim, ns), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.d_conv - 1, di + 2 * ns), dtype),
+    }
+
+
+def mamba_decode(params, cfg: ModelConfig, hidden: jax.Array, cache):
+    """hidden [B, 1, d_model] -> (out [B,1,d], new_cache)."""
+    b = hidden.shape[0]
+    di, nh, ns = mamba_dims(cfg)
+    p = cfg.ssm_head_dim
+
+    zxbcdt = linear_apply(params["in_proj"], hidden)
+    z, xbc, dt = _split_proj(cfg, zxbcdt)
+    xbc = jax.nn.silu(xbc)  # [B,1,C]
+    conv_hist = jnp.concatenate([cache["conv"], xbc.astype(cache["conv"].dtype)], axis=1)
+    w = params["conv_w"]  # [K, C]
+    xbc_c = jnp.einsum("bkc,kc->bc", conv_hist.astype(jnp.float32), w.astype(jnp.float32))
+    xbc_c = (xbc_c + params["conv_b"].astype(jnp.float32))[:, None, :]
+    new_conv = conv_hist[:, 1:, :]
+
+    x = xbc_c[..., :di].reshape(b, nh, p).astype(jnp.float32)
+    bm = xbc_c[..., 0, di : di + ns].astype(jnp.float32)  # [B,N]
+    cm = xbc_c[..., 0, di + ns :].astype(jnp.float32)
+    a_neg = -jnp.exp(params["A_log"].astype(jnp.float32))
+    dtv = jax.nn.softplus(dt[:, 0, :].astype(jnp.float32) + params["dt_bias"])  # [B,H]
+    a = jnp.exp(dtv * a_neg[None, :])  # [B,H]
+
+    s_new = a[:, :, None, None] * cache["ssm"] + jnp.einsum(
+        "bh,bhp,bn->bhpn", dtv, x, bm
+    )
+    y = jnp.einsum("bn,bhpn->bhp", cm, s_new) + params["D"][None, :, None] * x
+    y = y.reshape(b, 1, di).astype(hidden.dtype)
+    y = norm_apply(params["norm"], y * jax.nn.silu(z), "rmsnorm")
+    return linear_apply(params["out_proj"], y), {"ssm": s_new, "conv": new_conv}

@@ -1,0 +1,237 @@
+"""xLSTM blocks: mLSTM (matrix memory, exponential gating) in a chunked
+parallel form, and sLSTM (scalar memory, recurrent mixing) as a time scan.
+
+mLSTM recurrence (per head, head dim p):
+  m_t = max(lf_t + m_{t-1}, i_t)                       (log-scale stabilizer)
+  C_t = exp(lf_t + m_{t-1} - m_t) C_{t-1} + exp(i_t - m_t) v_t k_t^T
+  n_t = exp(lf_t + m_{t-1} - m_t) n_{t-1} + exp(i_t - m_t) k_t
+  y_t = C_t q_t / max(|n_t . q_t|, exp(-m_t))
+
+The chunked form evaluates the intra-chunk part as a masked attention-like
+quadratic with log-domain weights D[i,j] = g_i - g_j + i_j (g = cumsum of
+log-forget), carried state handled with its own log-scale, sequential only
+over chunks.  Decode is the plain one-step recurrence.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.sparse_linear import Boxed, linear_apply, linear_init
+from repro.models.common import norm_apply, norm_init
+from repro.sharding import shd
+
+NEG = -1e30
+
+
+def xlstm_dims(cfg: ModelConfig):
+    d_inner = cfg.expand * cfg.d_model
+    n_heads = cfg.padded_heads
+    return d_inner, n_heads, d_inner // n_heads
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+
+def mlstm_init(key, cfg: ModelConfig):
+    d = cfg.d_model
+    di, nh, p = xlstm_dims(cfg)
+    ks = jax.random.split(key, 7)
+    dtype = jnp.dtype(cfg.param_dtype)
+    scfg = cfg.sparsity
+    return {
+        "up": linear_init(ks[0], d, 2 * di, scfg, dtype=dtype, in_ax="embed", out_ax="ffn"),
+        "q": linear_init(ks[1], di, di, scfg, dtype=dtype, in_ax="ffn", out_ax="heads_flat"),
+        "k": linear_init(ks[2], di, di, scfg, dtype=dtype, in_ax="ffn", out_ax="heads_flat"),
+        "v": linear_init(ks[3], di, di, scfg, dtype=dtype, in_ax="ffn", out_ax="heads_flat"),
+        "gates": Boxed(jax.random.normal(ks[4], (di, 2 * nh), dtype) * 0.01, ("ffn", None)),
+        "gates_b": Boxed(jnp.concatenate([jnp.ones((nh,)) * 3.0, jnp.zeros((nh,))]), (None,)),
+        "norm": norm_init(di, "rmsnorm", dtype),
+        "down": linear_init(ks[5], di, d, scfg, dtype=dtype, in_ax="ffn", out_ax="embed",
+                            mode="reduce"),
+    }
+
+
+def _mlstm_qkvg(params, cfg: ModelConfig, hidden):
+    b, s, _ = hidden.shape
+    di, nh, p = xlstm_dims(cfg)
+    up = linear_apply(params["up"], hidden)
+    xi, z = up[..., :di], up[..., di:]
+    q = linear_apply(params["q"], xi).reshape(b, s, nh, p)
+    k = linear_apply(params["k"], xi).reshape(b, s, nh, p) / math.sqrt(p)
+    v = linear_apply(params["v"], xi).reshape(b, s, nh, p)
+    gates = xi @ params["gates"] + params["gates_b"]  # [B,S,2H]
+    lf = jax.nn.log_sigmoid(gates[..., :nh].astype(jnp.float32))  # log forget
+    ig = gates[..., nh:].astype(jnp.float32)  # input gate (log-domain)
+    return q, k, v, lf, ig, z
+
+
+def mlstm_apply(params, cfg: ModelConfig, hidden: jax.Array) -> jax.Array:
+    b, s, _ = hidden.shape
+    di, nh, p = xlstm_dims(cfg)
+    qq = min(cfg.ssm_chunk, s)
+    while s % qq != 0:
+        qq -= 1
+    nc = s // qq
+
+    q, k, v, lf, ig, z = _mlstm_qkvg(params, cfg, hidden)
+    f32 = jnp.float32
+    qc = q.reshape(b, nc, qq, nh, p).astype(f32)
+    kc = k.reshape(b, nc, qq, nh, p).astype(f32)
+    vc = v.reshape(b, nc, qq, nh, p).astype(f32)
+    lfc = lf.reshape(b, nc, qq, nh)
+    igc = ig.reshape(b, nc, qq, nh)
+
+    def chunk_step(carry, inputs):
+        C, n, m = carry  # [B,H,p,p], [B,H,p], [B,H]
+        qx, kx, vx, lfx, igx = inputs
+        g = jnp.cumsum(lfx, axis=1)  # [B,Q,H]
+        # log-weights
+        d_intra = g[:, :, None, :] - g[:, None, :, :] + igx[:, None, :, :]  # [B,i,j,H]
+        mask = (jnp.arange(qq)[:, None] >= jnp.arange(qq)[None, :])[None, :, :, None]
+        d_intra = jnp.where(mask, d_intra, NEG)
+        d_state = g + m[:, None, :]  # [B,Q,H]
+        m_i = jnp.maximum(d_intra.max(axis=2), d_state)  # [B,Q,H]
+        m_i = jnp.maximum(m_i, -m_i * 0)  # clamp at 0 => denominators sane
+        w_intra = jnp.exp(d_intra - m_i[:, :, None, :])  # [B,i,j,H]
+        w_state = jnp.exp(d_state - m_i)  # [B,Q,H]
+        scores = jnp.einsum("bihp,bjhp->bijh", qx, kx)  # [B,i,j,H]
+        num = jnp.einsum("bijh,bijh,bjhp->bihp", scores, w_intra, vx)
+        # C stored as v⊗k ([b,h,p=v-dim,r=k-dim]): q contracts the KEY dim r
+        num = num + w_state[..., None] * jnp.einsum("bhpr,bihr->bihp", C, qx)
+        den = jnp.einsum("bijh,bijh->bih", scores, w_intra)
+        den = den + w_state * jnp.einsum("bhp,bihp->bih", n, qx)
+        y = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_i))[..., None]
+        # carry update
+        g_last = g[:, -1, :]  # [B,H]
+        m_new = jnp.maximum(g_last + m, (g_last[:, None, :] - g + igx).max(axis=1))
+        decay_c = jnp.exp(g_last + m - m_new)  # [B,H]
+        w_new = jnp.exp(g_last[:, None, :] - g + igx - m_new[:, None, :])  # [B,Q,H]
+        C_new = decay_c[:, :, None, None] * C + jnp.einsum("bjh,bjhp,bjhr->bhpr", w_new, vx, kx)
+        n_new = decay_c[:, :, None] * n + jnp.einsum("bjh,bjhp->bhp", w_new, kx)
+        return (C_new, n_new, m_new), y
+
+    carry0 = (
+        jnp.zeros((b, nh, p, p), f32),
+        jnp.zeros((b, nh, p), f32),
+        jnp.full((b, nh), 0.0, f32),
+    )
+    inputs = tuple(jnp.moveaxis(t, 1, 0) for t in (qc, kc, vc, lfc, igc))
+    _, ys = jax.lax.scan(chunk_step, carry0, inputs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, s, di).astype(hidden.dtype)
+    y = norm_apply(params["norm"], y, "rmsnorm") * jax.nn.silu(z)
+    return linear_apply(params["down"], y)
+
+
+def mlstm_cache_init(cfg: ModelConfig, batch: int):
+    di, nh, p = xlstm_dims(cfg)
+    return {
+        "C": jnp.zeros((batch, nh, p, p), jnp.float32),
+        "n": jnp.zeros((batch, nh, p), jnp.float32),
+        "m": jnp.zeros((batch, nh), jnp.float32),
+    }
+
+
+def mlstm_decode(params, cfg: ModelConfig, hidden: jax.Array, cache):
+    b = hidden.shape[0]
+    di, nh, p = xlstm_dims(cfg)
+    q, k, v, lf, ig, z = _mlstm_qkvg(params, cfg, hidden)
+    f32 = jnp.float32
+    qx, kx, vx = (t[:, 0].astype(f32) for t in (q, k, v))  # [B,H,p]
+    lfx, igx = lf[:, 0], ig[:, 0]  # [B,H]
+    C, n, m = cache["C"], cache["n"], cache["m"]
+    m_new = jnp.maximum(lfx + m, igx)
+    fdec = jnp.exp(lfx + m - m_new)
+    iw = jnp.exp(igx - m_new)
+    C_new = fdec[:, :, None, None] * C + iw[:, :, None, None] * jnp.einsum(
+        "bhp,bhr->bhpr", vx, kx
+    )
+    n_new = fdec[:, :, None] * n + iw[:, :, None] * kx
+    num = jnp.einsum("bhpr,bhr->bhp", C_new, qx)
+    den = jnp.einsum("bhp,bhp->bh", n_new, qx)
+    y = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_new))[..., None]
+    y = y.reshape(b, 1, di).astype(hidden.dtype)
+    y = norm_apply(params["norm"], y, "rmsnorm") * jax.nn.silu(z)
+    return linear_apply(params["down"], y), {"C": C_new, "n": n_new, "m": m_new}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+
+def slstm_init(key, cfg: ModelConfig):
+    d = cfg.d_model
+    di, nh, p = xlstm_dims(cfg)
+    ks = jax.random.split(key, 4)
+    dtype = jnp.dtype(cfg.param_dtype)
+    scfg = cfg.sparsity
+    return {
+        "w": linear_init(ks[0], d, 4 * di, scfg, dtype=dtype, in_ax="embed", out_ax="ffn"),
+        # recurrent mixing is block-diagonal per head: [H, p, 4p]
+        "r": Boxed(jax.random.normal(ks[1], (nh, p, 4 * p), dtype) * 0.05, ("heads", None, None)),
+        "b": Boxed(jnp.concatenate(
+            [jnp.zeros((di,)), jnp.ones((di,)) * 3.0, jnp.zeros((2 * di,))]
+        ), (None,)),
+        "norm": norm_init(di, "rmsnorm", dtype),
+        "down": linear_init(ks[2], di, d, scfg, dtype=dtype, in_ax="ffn", out_ax="embed",
+                            mode="reduce"),
+    }
+
+
+def _slstm_cell(params, cfg, wx_t, state):
+    """One sLSTM step. wx_t: [B, 4di]; state: (c, n, h, m) with [B,H,p]."""
+    di, nh, p = xlstm_dims(cfg)
+    c, n, h, m = state
+    rh = jnp.einsum("bhp,hpq->bhq", h, params["r"].astype(jnp.float32))  # [B,H,4p]
+    pre = wx_t.reshape(-1, nh, 4 * p).astype(jnp.float32) + rh + params["b"].reshape(
+        nh, 4 * p
+    ).astype(jnp.float32)
+    i_g, f_g, z_g, o_g = jnp.split(pre, 4, axis=-1)  # [B,H,p] each
+    lf = jax.nn.log_sigmoid(f_g)
+    m_new = jnp.maximum(lf + m, i_g)
+    i_t = jnp.exp(i_g - m_new)
+    f_t = jnp.exp(lf + m - m_new)
+    c_new = f_t * c + i_t * jnp.tanh(z_g)
+    n_new = f_t * n + i_t
+    h_new = jax.nn.sigmoid(o_g) * c_new / jnp.maximum(n_new, 1.0)
+    return c_new, n_new, h_new, m_new
+
+
+def slstm_apply(params, cfg: ModelConfig, hidden: jax.Array) -> jax.Array:
+    b, s, _ = hidden.shape
+    di, nh, p = xlstm_dims(cfg)
+    wx = linear_apply(params["w"], hidden)  # [B,S,4di]
+
+    def step(state, wx_t):
+        new = _slstm_cell(params, cfg, wx_t, state)
+        return new, new[2]
+
+    z0 = jnp.zeros((b, nh, p), jnp.float32)
+    state0 = (z0, z0, z0, jnp.zeros((b, nh, p), jnp.float32))
+    _, hs = jax.lax.scan(step, state0, jnp.moveaxis(wx, 1, 0))
+    y = jnp.moveaxis(hs, 0, 1).reshape(b, s, di).astype(hidden.dtype)
+    y = norm_apply(params["norm"], y, "rmsnorm")
+    return linear_apply(params["down"], y)
+
+
+def slstm_cache_init(cfg: ModelConfig, batch: int):
+    di, nh, p = xlstm_dims(cfg)
+    z = jnp.zeros((batch, nh, p), jnp.float32)
+    return {"c": z, "n": z, "h": z, "m": z}
+
+
+def slstm_decode(params, cfg: ModelConfig, hidden: jax.Array, cache):
+    wx = linear_apply(params["w"], hidden)[:, 0]  # [B,4di]
+    state = (cache["c"], cache["n"], cache["h"], cache["m"])
+    c, n, h, m = _slstm_cell(params, cfg, wx, state)
+    di, nh, p = xlstm_dims(cfg)
+    y = h.reshape(-1, 1, di).astype(hidden.dtype)
+    y = norm_apply(params["norm"], y, "rmsnorm")
+    return linear_apply(params["down"], y), {"c": c, "n": n, "h": h, "m": m}

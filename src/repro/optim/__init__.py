@@ -1,0 +1,8 @@
+from repro.optim.adamw import (  # noqa: F401
+    AdamWConfig,
+    adamw_init,
+    adamw_update,
+    clip_by_global_norm,
+    global_norm,
+    opt_state_specs,
+)

@@ -1,0 +1,118 @@
+"""AdamW from scratch (no optax in this environment).
+
+- skips integer leaves (the compressed format's ``idx`` arrays ride along in
+  the param tree but are not trained),
+- keeps an fp32 master copy when params are stored in a lower precision
+  (mixed-precision training),
+- m/v/master inherit the params' logical sharding specs; the trainer adds the
+  ZeRO 'data' axis via the normal FSDP rules (they shard like params).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def _is_float(x) -> bool:
+    return hasattr(x, "dtype") and jnp.issubdtype(x.dtype, jnp.floating)
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+
+
+def adamw_init(params, keep_master: Optional[bool] = None) -> Dict[str, Any]:
+    if keep_master is None:
+        keep_master = any(
+            _is_float(l) and l.dtype != jnp.float32 for l in jax.tree_util.tree_leaves(params)
+        )
+    # int leaves (compressed idx arrays) get same-shape zero slots so the
+    # optimizer-state tree shares the params' sharding-spec tree exactly.
+    # Every array is freshly allocated — m/v/master must never alias params
+    # or each other (argument donation would otherwise donate a buffer twice).
+    def zeros_for(p):
+        return jnp.zeros(p.shape, jnp.float32 if _is_float(p) else jnp.int8)
+
+    state = {
+        "m": jax.tree_util.tree_map(zeros_for, params),
+        "v": jax.tree_util.tree_map(zeros_for, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+    if keep_master:
+        state["master"] = jax.tree_util.tree_map(
+            lambda p: jnp.array(p, dtype=jnp.float32 if _is_float(p) else p.dtype,
+                                copy=True),
+            params,
+        )
+    return state
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [l for l in jax.tree_util.tree_leaves(tree) if _is_float(l)]
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return (
+        jax.tree_util.tree_map(
+            lambda g: g * scale.astype(g.dtype) if _is_float(g) else g, grads
+        ),
+        norm,
+    )
+
+
+def adamw_update(params, grads, state, cfg: AdamWConfig, lr_scale=1.0):
+    """Returns (new_params, new_state, grad_norm)."""
+    grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    step = state["step"] + 1
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+    lr = cfg.lr * lr_scale
+    has_master = "master" in state
+    ref = state["master"] if has_master else params
+
+    def upd(p, g, m, v, mp):
+        if not _is_float(p):
+            return p, m, v, mp
+        gf = g.astype(jnp.float32)
+        m2 = cfg.b1 * m + (1 - cfg.b1) * gf
+        v2 = cfg.b2 * v + (1 - cfg.b2) * gf * gf
+        mhat = m2 / b1c
+        vhat = v2 / b2c
+        base = mp if has_master else p.astype(jnp.float32)
+        new = base - lr * (mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * base)
+        return new.astype(p.dtype), m2, v2, (new if has_master else mp)
+
+    out = jax.tree_util.tree_map(upd, params, grads, state["m"], state["v"], ref)
+    # unzip the 4-tuples
+    treedef = jax.tree_util.tree_structure(params)
+    flat = treedef.flatten_up_to(out)
+    new_p = treedef.unflatten([t[0] for t in flat])
+    new_m = treedef.unflatten([t[1] for t in flat])
+    new_v = treedef.unflatten([t[2] for t in flat])
+    new_state = {"m": new_m, "v": new_v, "step": step}
+    if has_master:
+        new_state["master"] = treedef.unflatten([t[3] for t in flat])
+    return new_p, new_state, gnorm
+
+
+def opt_state_specs(param_specs):
+    """Logical specs for the optimizer state mirroring the params."""
+    zero_spec = ()
+
+    def f(spec):
+        return spec
+
+    m_specs = jax.tree_util.tree_map(f, param_specs, is_leaf=lambda s: isinstance(s, tuple))
+    return {"m": m_specs, "v": m_specs, "step": (), "master": m_specs}

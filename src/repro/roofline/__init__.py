@@ -1,0 +1,10 @@
+from repro.roofline.analysis import (  # noqa: F401
+    HBM_BW,
+    LINK_BW,
+    PEAK_FLOPS,
+    CollectiveStats,
+    Roofline,
+    model_flops_for,
+    parse_collectives,
+    shape_bytes,
+)

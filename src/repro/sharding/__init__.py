@@ -1,0 +1,11 @@
+from repro.sharding.api import (  # noqa: F401
+    RULES,
+    ShardingCtx,
+    get_ctx,
+    logical_constraint,
+    resolve_spec,
+    set_ctx,
+    shd,
+    specs_to_shardings,
+    use_ctx,
+)

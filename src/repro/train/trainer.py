@@ -1,0 +1,125 @@
+"""Trainer: jitted step, deterministic data, async checkpoints, preemption /
+watchdog / straggler instrumentation, elastic restart.
+
+Runs unchanged from 1 CPU device (tests, examples) to the production mesh
+(the launcher installs the ShardingCtx + shardings; the step builder is the
+same one the dry-run compiles for 512 chips).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.launch.steps import make_train_step
+from repro.models import registry as reg
+from repro.optim import AdamWConfig, adamw_init
+from repro.train.checkpoint import CheckpointManager
+from repro.train.fault import PreemptionGuard, StepWatchdog, StragglerMonitor
+
+
+@dataclasses.dataclass
+class TrainConfig:
+    steps: int = 100
+    ckpt_dir: Optional[str] = None
+    ckpt_every: int = 50
+    log_every: int = 10
+    microbatches: int = 1
+    watchdog_timeout_s: float = 3600.0
+    seed: int = 0
+
+
+class Trainer:
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        data_cfg: DataConfig,
+        opt_cfg: AdamWConfig = AdamWConfig(),
+        train_cfg: TrainConfig = TrainConfig(),
+        params=None,
+    ):
+        self.cfg = cfg
+        self.train_cfg = train_cfg
+        self.data = SyntheticLM(data_cfg)
+        if params is None:
+            params, _ = reg.init_params(cfg, jax.random.PRNGKey(train_cfg.seed))
+        self.params = params
+        self.opt_state = adamw_init(params)
+        self.step_fn = jax.jit(
+            make_train_step(cfg, opt_cfg, microbatches=train_cfg.microbatches),
+            donate_argnums=(0, 1),
+        )
+        self.start_step = 0
+        self.ckpt = CheckpointManager(train_cfg.ckpt_dir) if train_cfg.ckpt_dir else None
+        self.history: list[Dict[str, float]] = []
+        self.straggler = StragglerMonitor()
+        self.preempt = PreemptionGuard()
+        self.watchdog: Optional[StepWatchdog] = None
+
+    # ------------------------------------------------------------------
+    def maybe_restore(self) -> int:
+        if self.ckpt is None or self.ckpt.latest_step() is None:
+            return 0
+        trees, meta = self.ckpt.restore(
+            None, {"params": self.params, "opt": self.opt_state}
+        )
+        self.params = jax.tree_util.tree_map(jax.numpy.asarray, trees["params"])
+        self.opt_state = jax.tree_util.tree_map(jax.numpy.asarray, trees["opt"])
+        self.start_step = int(meta["step"])
+        return self.start_step
+
+    def save(self, step: int, blocking: bool = True):
+        if self.ckpt is None:
+            return
+        self.ckpt.save(
+            step,
+            {"params": self.params, "opt": self.opt_state},
+            metadata={"step": step, "data": self.data.state_dict(step),
+                      "arch": self.cfg.name},
+            blocking=blocking,
+        )
+
+    # ------------------------------------------------------------------
+    def run(self, steps: Optional[int] = None) -> Dict[str, Any]:
+        steps = steps or self.train_cfg.steps
+        self.preempt.install()
+        self.watchdog = StepWatchdog(self.train_cfg.watchdog_timeout_s).start()
+        step = self.maybe_restore()
+        end = step + steps if self.start_step else steps
+        preempted = False
+        while step < end:
+            t0 = time.perf_counter()
+            batch = {k: jax.numpy.asarray(v) for k, v in self.data.batch_at(step).items()}
+            self.params, self.opt_state, metrics = self.step_fn(
+                self.params, self.opt_state, batch
+            )
+            if (step % self.train_cfg.log_every == 0) or step == end - 1:
+                m = {k: float(v) for k, v in metrics.items()}
+                dur = time.perf_counter() - t0
+                m.update(step=step, sec_per_step=dur)
+                self.history.append(m)
+            self.watchdog.beat()
+            self.straggler.record(step, time.perf_counter() - t0)
+            step += 1
+            if self.ckpt and step % self.train_cfg.ckpt_every == 0:
+                self.save(step, blocking=False)
+            if self.preempt.requested:
+                preempted = True
+                break
+        # final (preemption-safe) checkpoint
+        if self.ckpt:
+            self.ckpt.wait()
+            self.save(step, blocking=True)
+        self.watchdog.stop()
+        self.preempt.uninstall()
+        return {
+            "final_step": step,
+            "preempted": preempted,
+            "history": self.history,
+            "stragglers": self.straggler.events,
+        }

@@ -1,0 +1,42 @@
+"""CLI launcher smoke tests (subprocess — real argv paths)."""
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+
+
+def run_cli(args, timeout=600):
+    env = dict(os.environ, PYTHONPATH=str(REPO / "src"))
+    out = subprocess.run([sys.executable, "-m"] + args, capture_output=True,
+                         text=True, timeout=timeout, env=env, cwd=REPO)
+    assert out.returncode == 0, out.stderr[-2000:]
+    return out.stdout
+
+
+def test_train_cli_smoke(tmp_path):
+    out = run_cli([
+        "repro.launch.train", "--arch", "qwen2-0.5b", "--smoke",
+        "--steps", "8", "--batch", "4", "--seq", "32",
+        "--ckpt-dir", str(tmp_path), "--ckpt-every", "4",
+    ])
+    assert "loss" in out
+    assert any(p.name.startswith("step_") for p in tmp_path.iterdir())
+
+
+def test_serve_cli_smoke():
+    out = run_cli([
+        "repro.launch.serve", "--arch", "smollm-360m", "--smoke",
+        "--batch", "2", "--new-tokens", "6", "--sparsity", "0.5",
+    ])
+    assert "decode" in out and "tok/s" in out
+
+
+def test_dryrun_cli_single_cell(tmp_path):
+    out = run_cli([
+        "repro.launch.dryrun", "--arch", "smollm-360m", "--shape", "decode_32k",
+        "--mesh", "single", "--out", str(tmp_path),
+    ], timeout=900)
+    assert "[ok]" in out
+    assert list(tmp_path.glob("*.json"))

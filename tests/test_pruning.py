@@ -1,0 +1,244 @@
+"""Unit + property tests for the core pruning library."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    SparsityConfig,
+    colwise_nm_mask,
+    compress_layer,
+    forward_compressed_xla,
+    linear_apply,
+    linear_init,
+    meta_for,
+    pack_colwise,
+    prune_tree,
+    rowwise_nm_mask,
+    unbox_tree,
+    unpack_colwise,
+    unstructured_mask,
+)
+from repro.core.pruning import mask_is_colwise, mask_nm_counts, resolve_dims
+
+
+def rand(shape, seed=0, dtype=jnp.float32):
+    return jax.random.normal(jax.random.PRNGKey(seed), shape, dtype)
+
+
+# ---------------------------------------------------------------------------
+# Mask invariants
+# ---------------------------------------------------------------------------
+
+
+class TestMasks:
+    def test_colwise_exact_counts(self):
+        w = rand((64, 32))
+        mask = colwise_nm_mask(w, 0.5, m=16, tile=8)
+        counts = mask_nm_counts(np.asarray(mask), 16)
+        assert np.all(counts == 8), "exactly N=8 kept per group of M=16"
+
+    def test_colwise_tile_shared(self):
+        w = rand((128, 64))
+        mask = colwise_nm_mask(w, 0.75, m=None, tile=16)
+        assert mask_is_colwise(np.asarray(mask), 16)
+
+    def test_rowwise_is_tile1(self):
+        w = rand((64, 32))
+        a = rowwise_nm_mask(w, 0.5, m=4)
+        b = colwise_nm_mask(w, 0.5, m=4, tile=1)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_rowwise_24(self):
+        w = rand((64, 32))
+        mask = rowwise_nm_mask(w, 0.5, m=4)
+        m = np.asarray(mask).reshape(16, 4, 32)
+        assert np.all(m.sum(axis=1) == 2), "2 of every 4 kept per output"
+
+    def test_keeps_largest(self):
+        # With tile == d_out the score is the column L1 norm; the mask must
+        # keep the top-(1-s) columns.
+        w = np.zeros((8, 4), np.float32)
+        w[1] = 5.0
+        w[3] = 4.0
+        w[6] = 3.0
+        w[0] = 2.0
+        mask = np.asarray(colwise_nm_mask(jnp.asarray(w), 0.5, m=None, tile=None))
+        kept_rows = set(np.nonzero(mask[:, 0])[0].tolist())
+        assert kept_rows == {1, 3, 6, 0}
+
+    def test_unstructured_count(self):
+        w = rand((32, 32))
+        mask = unstructured_mask(w, 0.5)
+        assert int(np.asarray(mask).sum()) == 512
+
+    @given(
+        st.sampled_from([(32, 16), (64, 48), (128, 8)]),
+        st.sampled_from([0.25, 0.5, 0.75]),
+        st.sampled_from([4, 8, 16, None]),
+        st.sampled_from([1, 4, 8, None]),
+        st.integers(0, 2**31 - 1),
+    )
+    @settings(max_examples=25, deadline=None)
+    def test_mask_properties(self, shape, sparsity, m, tile, seed):
+        d_in, d_out = shape
+        w = rand((d_in, d_out), seed=seed % 1000)
+        cfg = SparsityConfig(sparsity=sparsity, m=m, tile=tile, format="masked")
+        t, mm, n, n_tiles, n_groups, k = resolve_dims(d_in, d_out, cfg)
+        mask = np.asarray(colwise_nm_mask(w, sparsity, m=m, tile=t))
+        assert mask_is_colwise(mask, t)
+        counts = mask_nm_counts(mask, mm)
+        assert np.all(counts == n)
+        # density matches N/M exactly
+        assert mask.sum() == n * n_groups * d_out
+
+
+# ---------------------------------------------------------------------------
+# Compressed format round-trip
+# ---------------------------------------------------------------------------
+
+
+class TestFormats:
+    @pytest.mark.parametrize("shape,cfg", [
+        ((64, 32), SparsityConfig(0.5, m=16, tile=8, format="compressed_xla")),
+        ((128, 96), SparsityConfig(0.75, m=None, tile=32, format="compressed_xla")),
+        ((48, 48), SparsityConfig(0.25, m=8, tile=None, format="compressed_xla")),
+    ])
+    def test_pack_unpack_roundtrip(self, shape, cfg):
+        d_in, d_out = shape
+        w = rand(shape)
+        meta = meta_for(d_in, d_out, cfg)
+        mask = colwise_nm_mask(w, cfg.sparsity, m=cfg.m, tile=meta.tile)
+        values, idx = pack_colwise(w, mask, meta)
+        assert values.shape == (meta.n_tiles, meta.k_kept, meta.tile)
+        assert idx.shape == (meta.n_tiles, meta.k_kept)
+        # indices ascending per tile
+        assert np.all(np.diff(np.asarray(idx), axis=1) > 0)
+        w_rec = unpack_colwise(values, idx, meta)
+        np.testing.assert_allclose(
+            np.asarray(w_rec), np.asarray(w * mask.astype(w.dtype)), rtol=1e-6
+        )
+
+    def test_forward_matches_masked_dense(self):
+        d_in, d_out = 96, 64
+        w = rand((d_in, d_out))
+        x = rand((5, d_in), seed=3)
+        cfg = SparsityConfig(0.5, m=24, tile=16, format="compressed_xla")
+        meta = meta_for(d_in, d_out, cfg)
+        mask = colwise_nm_mask(w, cfg.sparsity, m=cfg.m, tile=meta.tile)
+        values, idx = pack_colwise(w, mask, meta)
+        y_ref = x @ (w * mask.astype(w.dtype))
+        y = forward_compressed_xla(x, values, idx)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), atol=1e-5)
+
+    def test_forward_grad_matches(self):
+        d_in, d_out = 64, 32
+        w = rand((d_in, d_out))
+        x = rand((4, d_in), seed=7)
+        cfg = SparsityConfig(0.5, m=None, tile=8, format="compressed_xla")
+        meta = meta_for(d_in, d_out, cfg)
+        mask = colwise_nm_mask(w, cfg.sparsity, tile=meta.tile)
+        values, idx = pack_colwise(w, mask, meta)
+        wm = w * mask.astype(w.dtype)
+
+        g_ref = jax.grad(lambda xx: jnp.sum(jnp.sin(xx @ wm)))(x)
+        g = jax.grad(lambda xx: jnp.sum(jnp.sin(forward_compressed_xla(xx, values, idx))))(x)
+        np.testing.assert_allclose(np.asarray(g), np.asarray(g_ref), atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# SparseLinear layer
+# ---------------------------------------------------------------------------
+
+
+class TestSparseLinear:
+    def test_init_formats(self):
+        key = jax.random.PRNGKey(0)
+        for fmt in ["dense", "masked", "compressed_xla"]:
+            cfg = SparsityConfig(0.5, tile=16, format=fmt, min_dim=1)
+            p = linear_init(key, 64, 32, cfg, use_bias=True)
+            vals, specs = unbox_tree(p)
+            y = linear_apply(vals, rand((3, 64)))
+            assert y.shape == (3, 32)
+            assert jnp.isfinite(y).all()
+
+    def test_compress_then_apply_equals_masked(self):
+        key = jax.random.PRNGKey(1)
+        cfg_m = SparsityConfig(0.5, m=32, tile=8, format="masked", min_dim=1)
+        p = linear_init(key, 64, 32, cfg_m, use_bias=True)
+        vals, _ = unbox_tree(p)
+        x = rand((3, 64), seed=5)
+        y_masked = linear_apply(vals, x)
+        cfg_c = cfg_m.with_(format="compressed_xla")
+        comp = compress_layer(vals, cfg_c)
+        y_comp = linear_apply(comp, x)
+        np.testing.assert_allclose(np.asarray(y_comp), np.asarray(y_masked), atol=1e-5)
+
+    def test_min_dim_skips_small(self):
+        cfg = SparsityConfig(0.5, format="compressed_xla", min_dim=256)
+        p = linear_init(jax.random.PRNGKey(0), 64, 32, cfg)
+        vals, _ = unbox_tree(p)
+        assert "w" in vals and "values" not in vals
+
+    def test_prune_tree_only_2d(self):
+        params = {
+            "w1": rand((64, 64)),
+            "b": jnp.zeros((64,)),
+            "emb": rand((8, 64)),  # below min_dim
+        }
+        cfg = SparsityConfig(0.5, format="masked", min_dim=32)
+        pruned, masks = prune_tree(params, cfg)
+        assert masks["b"] is None and masks["emb"] is None
+        assert masks["w1"] is not None
+        assert float(jnp.mean(pruned["w1"] == 0)) >= 0.5
+
+
+class TestReduceMode:
+    """Shard-local REDUCE-mode compression (beyond-paper, DESIGN §5)."""
+
+    def test_pack_reduce_matches_masked(self):
+        d_in, d_out, g = 64, 48, 4
+        w = rand((d_in, d_out))
+        from repro.core.formats import pack_reduce, unpack_reduce
+        mask = colwise_nm_mask(w, 0.5, m=d_in // g, tile=None)  # tile=d_out
+        values, idx = pack_reduce(w, mask, g)
+        assert values.shape == (g, (d_in // g) // 2, d_out)
+        w_rec = unpack_reduce(values, idx, d_in)
+        np.testing.assert_allclose(np.asarray(w_rec),
+                                   np.asarray(w * mask.astype(w.dtype)), rtol=1e-6)
+
+    def test_forward_reduce_matches_masked(self):
+        from repro.core.formats import pack_reduce
+        from repro.core.sparse_linear import forward_compressed_reduce
+        d_in, d_out, g = 64, 32, 4
+        w = rand((d_in, d_out), seed=2)
+        x = rand((3, 5, d_in), seed=3)
+        mask = colwise_nm_mask(w, 0.5, m=d_in // g, tile=None)
+        values, idx = pack_reduce(w, mask, g)
+        y = forward_compressed_reduce(x, values, idx)
+        y_ref = x @ (w * mask.astype(w.dtype))
+        np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), atol=1e-5)
+
+    def test_linear_init_reduce_mode(self):
+        from repro.core.sparse_linear import linear_apply, linear_init, unbox_tree
+        cfg = SparsityConfig(0.5, format="compressed_xla", min_dim=1,
+                             shard_local_reduce=True, reduce_groups=4)
+        p = linear_init(jax.random.PRNGKey(0), 64, 32, cfg, mode="reduce")
+        vals, specs = unbox_tree(p)
+        assert "values_r" in vals and vals["values_r"].shape == (4, 8, 32)
+        y = linear_apply(vals, rand((3, 64)))
+        assert y.shape == (3, 32) and bool(jnp.isfinite(y).all())
+
+    def test_grad_flows(self):
+        from repro.core.formats import pack_reduce
+        from repro.core.sparse_linear import forward_compressed_reduce
+        d_in, d_out, g = 32, 16, 4
+        w = rand((d_in, d_out), seed=4)
+        x = rand((2, d_in), seed=5)
+        mask = colwise_nm_mask(w, 0.5, m=d_in // g, tile=None)
+        values, idx = pack_reduce(w, mask, g)
+        wm = w * mask.astype(w.dtype)
+        gx = jax.grad(lambda xx: jnp.sum(jnp.sin(forward_compressed_reduce(xx, values, idx))))(x)
+        gx_ref = jax.grad(lambda xx: jnp.sum(jnp.sin(xx @ wm)))(x)
+        np.testing.assert_allclose(np.asarray(gx), np.asarray(gx_ref), atol=1e-5)

@@ -1,0 +1,69 @@
+"""Property tests for the logical-axis sharding resolution — the invariants
+that keep every (arch × mesh) combination compiling."""
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from jax.sharding import PartitionSpec as P
+
+from repro.sharding import RULES, resolve_spec
+
+
+def fake_mesh(shape_dict):
+    class M:
+        shape = shape_dict
+    return M()
+
+
+MESHES = [
+    {"data": 16, "model": 16},
+    {"pod": 2, "data": 16, "model": 16},
+    {"data": 1, "model": 1},
+]
+
+
+class TestResolveSpec:
+    @given(
+        st.sampled_from(MESHES),
+        st.lists(st.sampled_from([1, 2, 5, 15, 16, 64, 960, 2048, 151936]),
+                 min_size=1, max_size=4),
+        st.lists(st.sampled_from(list(RULES) + [None]), min_size=4, max_size=4),
+        )
+    @settings(max_examples=100, deadline=None)
+    def test_invariants(self, mesh_shape, dims, names):
+        mesh = fake_mesh(mesh_shape)
+        names = names[: len(dims)]
+        spec = resolve_spec(dims, names, RULES, mesh)
+        assert len(spec) == len(dims)
+        used = []
+        for dim, part in zip(dims, spec):
+            axes = () if part is None else (part if isinstance(part, tuple) else (part,))
+            prod = 1
+            for ax in axes:
+                assert ax in mesh.shape, "only existing mesh axes"
+                assert ax not in used, "a mesh axis used at most once"
+                used.append(ax)
+                prod *= mesh.shape[ax]
+            assert dim % prod == 0, "sharded dims stay divisible"
+
+    def test_indivisible_dim_left_unsharded(self):
+        mesh = fake_mesh({"data": 16, "model": 16})
+        spec = resolve_spec((15, 64), ("heads", "head_dim"), RULES, mesh)
+        assert spec[0] is None  # 15 heads cannot shard over 16
+
+    def test_pod_axis_dropped_on_single_pod(self):
+        mesh = fake_mesh({"data": 16, "model": 16})
+        spec = resolve_spec((256, 128), ("act_batch", None), RULES, mesh)
+        assert spec[0] == "data"  # 'pod' silently dropped
+
+    def test_multi_axis_batch(self):
+        mesh = fake_mesh({"pod": 2, "data": 16, "model": 16})
+        spec = resolve_spec((256, 128), ("act_batch", None), RULES, mesh)
+        assert spec[0] == ("pod", "data")
+
+    def test_used_axis_not_reused_across_dims(self):
+        mesh = fake_mesh({"data": 16, "model": 16})
+        # expert and ffn both want 'model': only the first gets it
+        spec = resolve_spec((64, 2048, 1024), ("expert", "embed", "ffn"), RULES, mesh)
+        assert spec[0] == "model"
+        assert spec[2] is None
