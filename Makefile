@@ -1,0 +1,15 @@
+PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
+export PYTHONPATH
+
+.PHONY: test bench bench-quick ci
+
+test:            ## tier-1 test suite
+	python -m pytest -x -q
+
+bench:           ## full benchmark harness (all paper figures)
+	python -m benchmarks.run
+
+bench-quick:     ## smoke subset: conv layers + dispatch, 3 iters
+	python -m benchmarks.run --quick
+
+ci: test bench-quick  ## what scripts/ci.sh runs

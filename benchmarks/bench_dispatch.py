@@ -1,0 +1,85 @@
+"""Dispatched vs fixed-backend execution (paper §3.3 / AITemplate-analog).
+
+For every conv-layer GEMM shape in ``bench_conv_layers.LAYERS`` this bench:
+
+  1. times each *fixed* registered linear candidate (gather-einsum XLA,
+     fused Pallas micro-kernel) on the layer's [P, KhKwC] x [KhKwC, O] GEMM,
+  2. profiles the shape through ``repro.dispatch`` into a fresh profile DB,
+  3. times the *dispatched* execution (``best_impl`` consults the DB),
+
+and reports the dispatched/best-fixed ratio — the acceptance criterion is
+ratio ≈ 1 (dispatch never worse than the best fixed backend beyond noise).
+
+The output-position count is capped so the CPU interpret-mode Pallas
+candidate stays affordable; relative ordering is what the profiler needs.
+"""
+from __future__ import annotations
+
+import tempfile
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.bench_conv_layers import LAYERS, SPARSITY
+from benchmarks.timing import row, time_fn
+from repro import dispatch
+from repro.core import SparsityConfig, colwise_nm_mask, meta_for, pack_colwise
+from repro.dispatch import ProfileDB, REGISTRY
+
+MAX_POSITIONS = 256  # cap GEMM rows per layer (interpret-mode Pallas cost)
+
+
+def _gemm_problem(c, h, o, k, stride):
+    kdim = k * k * c
+    n_pos_side = (h + 2 * (k // 2 if k > 1 else 0) - k) // stride + 1
+    p = min(n_pos_side * n_pos_side, MAX_POSITIONS)
+    x = jax.random.normal(jax.random.PRNGKey(0), (p, kdim))
+    w = jax.random.normal(jax.random.PRNGKey(1), (kdim, o)) / jnp.sqrt(kdim)
+    cfg = SparsityConfig(SPARSITY, m=None, tile=None, format="compressed_xla")
+    meta = meta_for(kdim, o, cfg)
+    mask = colwise_nm_mask(w, SPARSITY, tile=meta.tile)
+    values, idx = pack_colwise(w, mask, meta)
+    return x, values, idx, meta
+
+
+def run(iters: int = 5):
+    out = []
+    db = ProfileDB(path=tempfile.mktemp(suffix=".json"), autosave=False)
+    prev = dispatch.get_db()
+    dispatch.set_db(db)
+    try:
+        for name, c, h, o, k, stride in LAYERS:
+            x, values, idx, meta = _gemm_problem(c, h, o, k, stride)
+            params = {"values": values, "idx": idx}
+            key = dispatch.linear_key_from(x.shape, values.shape)
+
+            # fixed-backend candidates
+            fixed_us = {}
+            for spec in REGISTRY.feasible(key, param_keys=("values", "idx")):
+                fn = jax.jit(lambda x, s=spec: s.apply(params, x))
+                fixed_us[spec.name] = time_fn(fn, x, iters=iters, warmup=1)
+                out.append(row(f"dispatch.{name}.{spec.name}",
+                               fixed_us[spec.name],
+                               f"P={x.shape[0]} K={meta.d_in} O={meta.d_out}"))
+
+            # profile into the DB, then run the dispatched path
+            rec = dispatch.profile_op(key, db, param_keys=("values", "idx"),
+                                      iters=max(iters, 3))
+
+            def dispatched(x):
+                spec = dispatch.best_impl(key, param_keys=("values", "idx"))
+                return spec.apply(params, x)
+
+            t_disp = time_fn(jax.jit(dispatched), x, iters=iters, warmup=1)
+            best_fixed = min(fixed_us.values())
+            out.append(row(
+                f"dispatch.{name}.dispatched", t_disp,
+                f"winner={rec['impl']} ratio_vs_best_fixed="
+                f"{t_disp / best_fixed:.2f}x"))
+    finally:
+        dispatch.set_db(prev)
+    return out
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -9,26 +9,33 @@ Prints ``name,us_per_call,derived`` CSV.  Mapping to the paper:
   bench_e2e          -> Table 2 / Fig. 11: end-to-end throughput vs sparsity
   bench_layout       -> Fig. 12: CNHW vs NHWC
   bench_roofline     -> assignment §Roofline from the dry-run artifacts
+  bench_dispatch     -> §3.3: dispatched vs fixed-backend operator selection
+
+``--quick`` runs a smoke subset (conv layers + dispatch, 3 iters) fast
+enough for CI / pre-commit, so dispatch-latency regressions are caught
+locally; ``--only NAME`` runs a single module.
 """
 from __future__ import annotations
 
+import argparse
+import inspect
 import sys
 import traceback
 
 
-def main() -> None:
+def _modules():
     from benchmarks import (
         bench_accuracy,
         bench_blockwidth,
         bench_conv_layers,
+        bench_dispatch,
         bench_e2e,
         bench_fusion,
         bench_layout,
         bench_roofline,
     )
 
-    print("name,us_per_call,derived")
-    modules = [
+    return [
         ("fig5_conv_layers", bench_conv_layers),
         ("fig6_8_fusion", bench_fusion),
         ("fig9_blockwidth", bench_blockwidth),
@@ -36,11 +43,41 @@ def main() -> None:
         ("table2_fig11_e2e", bench_e2e),
         ("fig12_layout", bench_layout),
         ("roofline", bench_roofline),
+        ("dispatch", bench_dispatch),
     ]
+
+
+QUICK = {"fig5_conv_layers", "dispatch"}
+QUICK_ITERS = 3  # median of 3: the middle sample, robust to one outlier
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="smoke subset with few iterations (CI mode)")
+    ap.add_argument("--only", default=None, metavar="NAME",
+                    help="run a single benchmark module by name")
+    args = ap.parse_args(argv)
+
+    modules = _modules()
+    if args.only:
+        modules = [(n, m) for n, m in modules if n == args.only]
+        if not modules:
+            sys.exit(f"unknown benchmark {args.only!r}; known: "
+                     f"{[n for n, _ in _modules()]}")
+    elif args.quick:
+        modules = [(n, m) for n, m in modules if n in QUICK]
+
+    print("name,us_per_call,derived")
     failures = 0
     for name, mod in modules:
         try:
-            for line in mod.run():
+            # --quick shrinks iterations, but only for modules whose run()
+            # takes an iters knob (e2e/accuracy/roofline parameterize
+            # differently)
+            quick_ok = args.quick and "iters" in inspect.signature(mod.run).parameters
+            lines = mod.run(iters=QUICK_ITERS) if quick_ok else mod.run()
+            for line in lines:
                 print(line)
             sys.stdout.flush()
         except Exception:  # noqa: BLE001

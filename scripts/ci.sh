@@ -1,0 +1,12 @@
+#!/usr/bin/env bash
+# Local CI: tier-1 test suite + quick benchmark smoke (catches dispatch
+# latency/selection regressions before they land).  Usage: scripts/ci.sh
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== tier-1 tests =="
+python -m pytest -x -q
+
+echo "== quick benchmarks =="
+python -m benchmarks.run --quick

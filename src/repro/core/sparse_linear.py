@@ -172,20 +172,29 @@ def forward_masked(x: jax.Array, w: jax.Array, mask: jax.Array) -> jax.Array:
     return x @ (w * mask.astype(w.dtype))
 
 
-def linear_apply(params, x: jax.Array, *, prefer_pallas: bool = False) -> jax.Array:
-    """Apply a layer created by ``linear_init`` (unboxed params)."""
+def linear_apply(params, x: jax.Array, *, prefer_pallas: bool = False,
+                 impl: Optional[str] = None) -> jax.Array:
+    """Apply a layer created by ``linear_init`` (unboxed params).
+
+    Compressed layers route through ``repro.dispatch``: the implementation
+    (gather-einsum XLA vs. fused Pallas micro-kernel) is chosen per operator
+    shape from the profile DB / platform heuristic.  ``impl=`` (or the legacy
+    ``prefer_pallas`` flag) forces a specific candidate, and
+    ``REPRO_DISPATCH=off`` restores the pre-dispatch fixed routing.
+    """
     if "values_r" in params:
         y = forward_compressed_reduce(x, params["values_r"], params["idx_r"])
         if "b" in params:
             y = y + params["b"]
         return y
     if "values" in params:
-        if prefer_pallas:
-            from repro.kernels.colwise_nm import ops as cops
+        from repro import dispatch as _dispatch
 
-            y = cops.colwise_nm_matmul(x, params["values"], params["idx"])
-        else:
-            y = forward_compressed_xla(x, params["values"], params["idx"])
+        if impl is None and prefer_pallas:
+            impl = "compressed_pallas"
+        spec = _dispatch.linear_impl(
+            x.shape, params["values"].shape, x.dtype, force=impl)
+        y = spec.apply(params, x)
     elif "mask" in params:
         y = forward_masked(x, params["w"], params["mask"])
     else:

@@ -1,132 +1,15 @@
-"""Auto-tuning framework (paper §3.3, AITemplate-analog).
+"""Backwards-compat shim — the auto-tuner now lives in ``repro.dispatch``.
 
-The paper parameterizes its XNNPACK micro-kernels by tile size T and LMUL,
-profiles every candidate on the target, and bakes the fastest into the
-executable.  Here:
-
-  candidates = tile width T (accumulator footprint) x block widths
-               (block_b, block_k — the LMUL analog)
-
-  measurement = - wall-clock of the jitted XLA candidate on the host
-                  (a real profile, like AITemplate), and
-                - an analytic TPU VMEM-roofline score for the Pallas kernel
-                  geometry (the dry-run has no TPU to time)
-
-Selections are cached in a JSON keyed by (d_in, d_out, batch, sparsity) so a
-model build can ask for the tuned tile per layer shape
-(``tuned_tile(...)``) exactly the way AITemplate consults its profile DB.
+The seed's ad-hoc ``Tuner`` grew into the operator dispatch & profiling
+subsystem (``repro.dispatch``): an operator registry of candidate
+implementations, a profiler harness, and a versioned, environment-
+fingerprinted profile DB.  Import from ``repro.dispatch`` in new code; this
+module only re-exports the original names so existing imports keep working.
 """
-from __future__ import annotations
-
-import dataclasses
-import json
-import time
-from pathlib import Path
-from typing import Dict, List, Optional, Tuple
-
-import jax
-import jax.numpy as jnp
-
-from repro.core.formats import meta_for, pack_colwise
-from repro.core.pruning import SparsityConfig, colwise_nm_mask
-
-VMEM_BYTES = 16 * 2 ** 20  # ~16 MB usable per core
-
-
-@dataclasses.dataclass
-class Candidate:
-    tile: int
-    block_b: int
-    block_k: int
-    wall_us: Optional[float] = None
-    vmem_bytes: int = 0
-    feasible: bool = True
-    score: float = 0.0
-
-
-def _pallas_vmem(block_b: int, block_k: int, d_in: int, tile: int, itemsize=2) -> int:
-    from repro.kernels.colwise_nm.kernel import vmem_bytes
-
-    return vmem_bytes(block_b, block_k, d_in, tile, itemsize)
-
-
-def _time_xla_candidate(batch, d_in, d_out, sparsity, tile, iters=5) -> float:
-    key = jax.random.PRNGKey(0)
-    x = jax.random.normal(key, (batch, d_in))
-    w = jax.random.normal(jax.random.PRNGKey(1), (d_in, d_out)) / (d_in ** 0.5)
-    cfg = SparsityConfig(sparsity, m=None, tile=tile, format="compressed_xla")
-    meta = meta_for(d_in, d_out, cfg)
-    mask = colwise_nm_mask(w, sparsity, tile=meta.tile)
-    values, idx = pack_colwise(w, mask, meta)
-
-    @jax.jit
-    def f(x):
-        xg = jnp.take(x, idx, axis=-1)
-        return jnp.einsum("btk,tkf->btf", xg, values)
-
-    f(x).block_until_ready()
-    times = []
-    for _ in range(iters):
-        t0 = time.perf_counter()
-        f(x).block_until_ready()
-        times.append(time.perf_counter() - t0)
-    return sorted(times)[len(times) // 2] * 1e6
-
-
-def enumerate_candidates(d_in: int, d_out: int) -> List[Candidate]:
-    tiles = sorted({t for t in (32, 64, 128, 256, 512, d_out) if d_out % t == 0})
-    blocks = [(128, 128), (256, 128), (128, 256), (512, 128)]
-    out = []
-    for t in tiles:
-        for bb, bk in blocks:
-            vm = _pallas_vmem(bb, bk, d_in, min(t, 512))
-            out.append(Candidate(tile=t, block_b=bb, block_k=bk,
-                                 vmem_bytes=vm, feasible=vm <= VMEM_BYTES))
-    return out
-
-
-class Tuner:
-    def __init__(self, cache_path: str = "artifacts/tuning_cache.json"):
-        self.path = Path(cache_path)
-        self.cache: Dict[str, Dict] = {}
-        if self.path.exists():
-            self.cache = json.loads(self.path.read_text())
-
-    def _key(self, batch, d_in, d_out, sparsity) -> str:
-        return f"b{batch}_i{d_in}_o{d_out}_s{int(sparsity*100)}"
-
-    def tune(self, batch: int, d_in: int, d_out: int, sparsity: float = 0.5,
-             profile: bool = True) -> Dict:
-        """Profile candidates; returns the winning config (cached)."""
-        key = self._key(batch, d_in, d_out, sparsity)
-        if key in self.cache:
-            return self.cache[key]
-        cands = enumerate_candidates(d_in, d_out)
-        best = None
-        tried_tiles = set()
-        for c in cands:
-            if not c.feasible:
-                continue
-            if profile and c.tile not in tried_tiles:
-                # wall time depends on the tile (XLA path); block geometry is
-                # scored analytically (VMEM pressure => prefer bigger blocks
-                # while they fit, like the paper prefers higher LMUL)
-                c.wall_us = _time_xla_candidate(batch, d_in, d_out, sparsity, c.tile)
-                tried_tiles.add(c.tile)
-            wall = c.wall_us or next(
-                (o.wall_us for o in cands if o.tile == c.tile and o.wall_us), 1e9
-            )
-            c.score = wall * (1.0 + c.vmem_bytes / VMEM_BYTES * 0.1)
-            if best is None or c.score < best.score:
-                best = c
-        result = {
-            "tile": best.tile, "block_b": best.block_b, "block_k": best.block_k,
-            "wall_us": best.wall_us, "vmem_bytes": best.vmem_bytes,
-        }
-        self.cache[key] = result
-        self.path.parent.mkdir(parents=True, exist_ok=True)
-        self.path.write_text(json.dumps(self.cache, indent=1))
-        return result
-
-    def tuned_tile(self, batch: int, d_in: int, d_out: int, sparsity: float = 0.5) -> int:
-        return int(self.tune(batch, d_in, d_out, sparsity)["tile"])
+from repro.dispatch.profiler import (  # noqa: F401
+    Candidate,
+    Tuner,
+    TuningError,
+    enumerate_candidates,
+)
+from repro.dispatch.registry import VMEM_BYTES  # noqa: F401

@@ -1,0 +1,37 @@
+# Operator dispatch & profiling subsystem (paper §3.3, AITemplate-analog):
+# a registry of candidate implementations per logical op, a profiler that
+# races the feasible ones, a fingerprinted persistent profile DB, and the
+# best_impl() selection layer every sparse call site consults.
+from repro.dispatch.registry import (  # noqa: F401
+    REGISTRY,
+    VMEM_BYTES,
+    ImplSpec,
+    OperatorRegistry,
+    OpKey,
+    bucket_batch,
+    conv_key,
+    linear_key,
+    linear_key_from,
+)
+from repro.dispatch.profiler import (  # noqa: F401
+    DEFAULT_DB_PATH,
+    SCHEMA_VERSION,
+    Candidate,
+    ProfileDB,
+    Tuner,
+    TuningError,
+    enumerate_candidates,
+    env_fingerprint,
+    median_wall_us,
+    profile_op,
+)
+from repro.dispatch.dispatch import (  # noqa: F401
+    best_impl,
+    dispatch_enabled,
+    ensure_profiled,
+    get_db,
+    iter_compressed_layers,
+    linear_impl,
+    plan_params,
+    set_db,
+)

@@ -1,0 +1,246 @@
+"""Dispatch layer: pick the implementation that runs a logical op.
+
+Selection order for :func:`best_impl` (first hit wins):
+
+  1. explicit ``force=`` argument — call-site override (e.g. the
+     ``prefer_pallas`` compat flag on ``linear_apply``); honoured even with
+     dispatch off, matching the pre-dispatch call-site semantics.
+  2. ``REPRO_DISPATCH_FORCE=<impl>`` — process-wide override by name (only
+     consulted while dispatch is enabled).
+  3. ``REPRO_DISPATCH=off``       — dispatch disabled; the legacy default
+     implementation for the op is returned (``compressed_xla`` for linear,
+     ``im2col_sparse_pallas`` for conv), so behaviour is bit-identical to the
+     pre-dispatch code paths.
+  4. profile DB entry              — a previously profiled winner for this
+     exact :class:`OpKey` token, if it is still feasible and registered.
+  5. heuristic                     — among feasible candidates prefer the
+     backend that matches the platform (pallas on TPU, XLA elsewhere), then
+     registry priority, then smallest VMEM footprint.
+
+Profiling never happens implicitly inside a model trace; callers that want a
+populated DB run :func:`ensure_profiled` / :func:`plan_params` at build time
+(the serve ``Engine`` does) or set ``REPRO_DISPATCH_PROFILE=1``.
+"""
+from __future__ import annotations
+
+import os
+from typing import Dict, Iterable, Optional
+
+from repro.dispatch.profiler import ProfileDB, TuningError, profile_op
+from repro.dispatch.registry import (
+    REGISTRY,
+    ImplSpec,
+    OpKey,
+    linear_key,
+    linear_key_from,
+)
+
+# legacy per-op defaults used when dispatch is switched off
+_LEGACY_DEFAULT = {"linear": "compressed_xla", "conv": "im2col_sparse_pallas"}
+
+_DB: Optional[ProfileDB] = None
+_MEMO: Dict[tuple, ImplSpec] = {}
+
+
+def get_db() -> ProfileDB:
+    """Process-wide profile DB singleton (path via ``REPRO_DISPATCH_DB``)."""
+    global _DB
+    if _DB is None:
+        _DB = ProfileDB()
+    return _DB
+
+
+def set_db(db: Optional[ProfileDB]) -> None:
+    """Swap the active profile DB (tests, benchmark isolation)."""
+    global _DB
+    _DB = db
+    _MEMO.clear()
+
+
+def dispatch_enabled() -> bool:
+    return os.environ.get("REPRO_DISPATCH", "on").lower() not in ("off", "0", "false")
+
+
+def _env_force() -> Optional[str]:
+    return os.environ.get("REPRO_DISPATCH_FORCE") or None
+
+
+def _profile_on_miss() -> bool:
+    return os.environ.get("REPRO_DISPATCH_PROFILE", "0").lower() in ("1", "on", "true")
+
+
+def _heuristic(specs, key: OpKey) -> ImplSpec:
+    import jax
+
+    on_tpu = jax.default_backend() == "tpu"
+
+    def rank(s: ImplSpec):
+        backend_match = 0 if (s.backend == "pallas") == on_tpu else 1
+        return (backend_match, s.priority, s.vmem_bytes(key))
+
+    return min(specs, key=rank)
+
+
+def best_impl(key: OpKey, *, param_keys: Optional[Iterable[str]] = None,
+              force: Optional[str] = None, db: Optional[ProfileDB] = None) -> ImplSpec:
+    """Resolve the implementation to run for ``key`` (see module docstring).
+
+    ``param_keys`` restricts candidates to those executable from a given
+    param dict (a compressed layer cannot run the dense candidate).
+    Pure lookup — never wall-clocks anything.
+    """
+    pk = frozenset(param_keys) if param_keys is not None else None
+    explicit = force is not None
+    if force is None and dispatch_enabled():
+        # the env override only applies when dispatch is on; an explicit
+        # force= argument (e.g. prefer_pallas) always wins, matching the
+        # pre-dispatch behaviour of the call sites
+        force = _env_force()
+    the_db = db if db is not None else get_db()
+    memo_key = (key.token, pk, force, explicit, dispatch_enabled(),
+                the_db.uid, the_db.generation, REGISTRY.generation)
+    hit = _MEMO.get(memo_key)
+    if hit is not None:
+        return hit
+    spec = _resolve(key, pk, force, explicit, the_db)
+    if len(_MEMO) > 4096:
+        _MEMO.clear()
+    _MEMO[memo_key] = spec
+    return spec
+
+
+def _resolve(key: OpKey, pk, force: Optional[str], explicit: bool,
+             db: ProfileDB) -> ImplSpec:
+    cands = REGISTRY.candidates(key.op, param_keys=pk)
+    if not cands:
+        raise TuningError(f"no candidates registered for op {key.op!r} "
+                          f"executable from params {sorted(pk or ())}")
+    by_name = {s.name: s for s in cands}
+
+    if force is not None:
+        if force in by_name:
+            return by_name[force]
+        registered = force in {s.name for s in REGISTRY.candidates(key.op)}
+        if not registered:
+            raise KeyError(
+                f"REPRO_DISPATCH_FORCE / force={force!r} is not a registered "
+                f"{key.op!r} impl; known: {sorted(by_name)}")
+        if explicit or pk is None:
+            # an explicit call-site force= naming an impl that cannot execute
+            # these params is a caller bug — surface it, never substitute
+            raise KeyError(
+                f"force={force!r} cannot execute a {key.op!r} layer with "
+                f"params {sorted(pk or ())}; it requires "
+                f"{sorted(REGISTRY.get(key.op, force).requires)}")
+        # process-wide env override that doesn't apply to this layer's param
+        # format: ignore it for this call rather than crash mid-model
+
+    if not dispatch_enabled():
+        legacy = _LEGACY_DEFAULT.get(key.op)
+        if legacy in by_name:
+            return by_name[legacy]
+        return cands[0]
+
+    feasible = [s for s in cands if s.feasible(key)[0]]
+    if not feasible:
+        # nothing passes the static predicates: degrade to the candidate with
+        # the smallest declared footprint instead of refusing to run
+        return min(cands, key=lambda s: s.vmem_bytes(key))
+
+    rec = db.get(key.token)
+    if rec is not None and rec.get("impl") in by_name:
+        spec = by_name[rec["impl"]]
+        if spec.feasible(key)[0]:
+            return spec
+
+    if _profile_on_miss():
+        try:
+            rec = profile_op(key, db, param_keys=pk)
+            if rec["impl"] in by_name:
+                return by_name[rec["impl"]]
+        except TuningError:
+            pass
+
+    return _heuristic(feasible, key)
+
+
+def ensure_profiled(key: OpKey, *, param_keys=None, db: Optional[ProfileDB] = None,
+                    iters: int = 5) -> Dict:
+    """Profile ``key`` if the DB has no entry for it; return the record."""
+    the_db = db if db is not None else get_db()
+    rec = the_db.get(key.token)
+    if rec is None:
+        rec = profile_op(key, the_db, iters=iters, param_keys=param_keys)
+    return rec
+
+
+# ---------------------------------------------------------------------------
+# Call-site helpers
+# ---------------------------------------------------------------------------
+
+
+def linear_impl(x_shape, values_shape, dtype="float32", *,
+                force: Optional[str] = None) -> ImplSpec:
+    """Implementation for a compressed linear given activation/values shapes
+    (the hot path used by ``core.sparse_linear.linear_apply``)."""
+    key = linear_key_from(x_shape, values_shape, dtype)
+    return best_impl(key, param_keys=("values", "idx"), force=force)
+
+
+def iter_compressed_layers(tree, prefix: str = ""):
+    """Yield (path, values, idx) for every compressed layer in a params tree
+    (plain dicts or ``Boxed`` leaves; scan-stacked leading dims allowed)."""
+    def unval(v):
+        return getattr(v, "value", v)
+
+    if isinstance(tree, dict):
+        if "values" in tree and "idx" in tree:
+            yield prefix or ".", unval(tree["values"]), unval(tree["idx"])
+        for k, v in tree.items():
+            if k in ("values", "idx"):
+                continue
+            yield from iter_compressed_layers(v, f"{prefix}/{k}" if prefix else str(k))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            yield from iter_compressed_layers(v, f"{prefix}[{i}]")
+
+
+def plan_params(params, *, batch_hint: int = 8, db: Optional[ProfileDB] = None,
+                profile: Optional[bool] = None) -> Dict[str, str]:
+    """Build-time dispatch plan for a model's params tree.
+
+    Scans for compressed layers, resolves (and optionally profiles) the
+    implementation for each distinct OpKey, and returns {token: impl name}.
+    Called by the serve ``Engine`` so the first traced forward already sees a
+    warm DB.  ``profile`` defaults to ``REPRO_DISPATCH_PROFILE``.
+    """
+    if not dispatch_enabled():
+        # legacy fixed routing ignores the plan; skip the tree walk and the
+        # per-layer idx.max() device syncs entirely
+        return {}
+    if profile is None:
+        profile = _profile_on_miss()
+    the_db = db if db is not None else get_db()
+    plan: Dict[str, str] = {}
+    for _path, values, idx in iter_compressed_layers(params):
+        n_tiles, k_kept, tile = (int(s) for s in values.shape[-3:])
+        # d_in is not stored in the compressed layout; the max kept index
+        # bounds it from below, and OpKey buckets d_in to a power of two, so
+        # this lands in the trace-time token whenever the kept support
+        # reaches the top half of the reduction dim (essentially always for
+        # magnitude-pruned weights).  If it doesn't, the plan warms a token
+        # the forward never looks up and that layer falls back to the
+        # heuristic — a missed warm-up, never a wrong result.
+        d_in = int(idx.max()) + 1 if getattr(idx, "size", 0) else k_kept
+        key = linear_key(batch_hint, d_in, n_tiles * tile, k_kept, tile,
+                         dtype=getattr(values, "dtype", "float32"))
+        if key.token in plan:
+            continue
+        if profile and key.token not in the_db:
+            try:
+                ensure_profiled(key, param_keys=("values", "idx"), db=the_db)
+            except TuningError:
+                pass
+        plan[key.token] = best_impl(
+            key, param_keys=("values", "idx"), db=the_db).name
+    return plan

@@ -1,0 +1,314 @@
+"""Profiler harness + persistent profile DB (paper §3.3, AITemplate-analog).
+
+The paper parameterizes its XNNPACK micro-kernels by tile size T and LMUL,
+profiles every candidate on the target, and bakes the fastest into the
+executable.  Here the same loop is split into reusable pieces:
+
+  * :class:`ProfileDB` — a versioned, environment-fingerprinted JSON store of
+    profiling results.  Entries recorded under a different backend/device/jax
+    version (or an older schema, including the seed-era ``tuning_cache.json``
+    format) are invalidated on load instead of silently reused.  Writes are
+    atomic (temp file + ``os.replace``) so a crash mid-save never corrupts
+    the DB, and an in-memory LRU bounds resident entries.
+  * :func:`profile_op` — wall-clocks every feasible registered candidate for
+    an :class:`OpKey` and records the winner.
+  * :class:`Tuner` — the seed's block-geometry auto-tuner, absorbed here
+    (``repro.core.tuning`` is now a thin shim over this class).  It answers
+    the finer-grained question "which (tile, block_b, block_k) geometry for
+    the compressed kernels", while ``profile_op`` answers "which candidate
+    implementation altogether".
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import tempfile
+import time
+from collections import OrderedDict
+from pathlib import Path
+from typing import Callable, Dict, List, Optional
+
+from repro.dispatch.registry import REGISTRY, VMEM_BYTES, ImplSpec, OpKey
+
+SCHEMA_VERSION = 2
+DEFAULT_DB_PATH = "artifacts/dispatch_profile.json"
+
+
+class TuningError(RuntimeError):
+    """No feasible candidate exists for an operator shape."""
+
+
+def env_fingerprint() -> Dict[str, str]:
+    """Identity of the profiling environment; a profile is only valid on the
+    machine/backend/software that produced it."""
+    import jax
+
+    try:
+        device = jax.devices()[0].device_kind
+    except Exception:  # noqa: BLE001 — no devices in some dry-run contexts
+        device = "unknown"
+    return {
+        "backend": jax.default_backend(),
+        "device": device,
+        "jax": jax.__version__,
+        "schema": SCHEMA_VERSION,
+    }
+
+
+def median_wall_us(fn: Callable[[], object], iters: int = 5, warmup: int = 2) -> float:
+    """Median wall-clock of ``fn()`` in microseconds (blocks on results)."""
+    import jax
+
+    for _ in range(warmup):
+        jax.block_until_ready(fn())
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2] * 1e6
+
+
+class ProfileDB:
+    """Persistent profile store: ``{version, fingerprint, entries}``.
+
+    ``entries`` maps an :attr:`OpKey.token` (or a Tuner shape key) to a JSON
+    record.  The in-memory view is an LRU capped at ``max_entries``; the
+    on-disk file holds whatever was resident at the last save.
+    """
+
+    _uid_counter = 0  # process-unique instance ids (id() can be recycled)
+
+    def __init__(self, path: Optional[str] = None, max_entries: int = 1024,
+                 autosave: bool = True):
+        self.path = Path(path or os.environ.get("REPRO_DISPATCH_DB", DEFAULT_DB_PATH))
+        self.max_entries = max_entries
+        self.autosave = autosave
+        self.fingerprint = env_fingerprint()
+        self._entries: "OrderedDict[str, Dict]" = OrderedDict()
+        self.invalidated = False  # a stale/foreign file was found and ignored
+        self.generation = 0       # bumped on every mutation (memo invalidation)
+        ProfileDB._uid_counter += 1
+        self.uid = ProfileDB._uid_counter
+        self._load()
+
+    # -- persistence --------------------------------------------------------
+
+    def _load(self) -> None:
+        if not self.path.exists():
+            return
+        try:
+            data = json.loads(self.path.read_text())
+        except (OSError, json.JSONDecodeError):
+            self.invalidated = True
+            return
+        if not isinstance(data, dict) or data.get("version") != SCHEMA_VERSION:
+            # seed-era caches were a bare {key: record} dict with no version
+            self.invalidated = True
+            return
+        if data.get("fingerprint") != self.fingerprint:
+            self.invalidated = True
+            return
+        for k, v in data.get("entries", {}).items():
+            self._entries[k] = v
+
+    def save(self) -> None:
+        """Atomic write: serialize to a temp file in the same directory, then
+        ``os.replace`` so readers never observe a torn file."""
+        self.path.parent.mkdir(parents=True, exist_ok=True)
+        payload = json.dumps({
+            "version": SCHEMA_VERSION,
+            "fingerprint": self.fingerprint,
+            "entries": dict(self._entries),
+        }, indent=1)
+        fd, tmp = tempfile.mkstemp(dir=str(self.path.parent),
+                                   prefix=self.path.name, suffix=".tmp")
+        try:
+            with os.fdopen(fd, "w") as f:
+                f.write(payload)
+            os.replace(tmp, self.path)
+        except BaseException:
+            if os.path.exists(tmp):
+                os.unlink(tmp)
+            raise
+
+    # -- entry access -------------------------------------------------------
+
+    def get(self, token: str) -> Optional[Dict]:
+        rec = self._entries.get(token)
+        if rec is not None:
+            self._entries.move_to_end(token)
+        return rec
+
+    def put(self, token: str, record: Dict, save: Optional[bool] = None) -> None:
+        self._entries[token] = record
+        self._entries.move_to_end(token)
+        while len(self._entries) > self.max_entries:
+            self._entries.popitem(last=False)
+        self.generation += 1
+        if save if save is not None else self.autosave:
+            self.save()
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def __contains__(self, token: str) -> bool:
+        return token in self._entries
+
+    def tokens(self) -> List[str]:
+        return list(self._entries)
+
+
+# ---------------------------------------------------------------------------
+# Candidate-level profiling (which implementation wins for this op shape)
+# ---------------------------------------------------------------------------
+
+
+def profile_op(key: OpKey, db: Optional[ProfileDB] = None, *,
+               impls: Optional[List[ImplSpec]] = None, iters: int = 5,
+               param_keys=None) -> Dict:
+    """Wall-clock every feasible candidate for ``key``; record + return the
+    winner's record ``{"impl", "wall_us", "all": {name: us}}``."""
+    if impls is None:
+        impls = REGISTRY.candidates(key.op, param_keys=param_keys)
+    feasible = [s for s in impls if s.feasible(key)[0] and s.make_bench]
+    if not feasible:
+        reasons = {s.name: s.feasible(key)[1] for s in impls}
+        raise TuningError(
+            f"no feasible candidate for {key.token}: {reasons}")
+    timings: Dict[str, float] = {}
+    for spec in feasible:
+        timings[spec.name] = median_wall_us(spec.make_bench(key), iters=iters)
+    winner = min(timings, key=timings.get)
+    record = {"impl": winner, "wall_us": timings[winner], "all": timings}
+    if db is not None:
+        db.put(key.token, record)
+    return record
+
+
+# ---------------------------------------------------------------------------
+# Geometry-level tuning (absorbed seed Tuner: tile x block_b x block_k)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class Candidate:
+    tile: int
+    block_b: int
+    block_k: int
+    wall_us: Optional[float] = None
+    vmem_bytes: int = 0
+    feasible: bool = True
+    score: float = 0.0
+
+
+def _pallas_vmem(block_b: int, block_k: int, d_in: int, tile: int, itemsize=2) -> int:
+    from repro.kernels.colwise_nm.kernel import vmem_bytes
+
+    return vmem_bytes(block_b, block_k, d_in, tile, itemsize)
+
+
+def _time_xla_candidate(batch, d_in, d_out, sparsity, tile, iters=5) -> float:
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.formats import meta_for, pack_colwise
+    from repro.core.pruning import SparsityConfig, colwise_nm_mask
+
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (batch, d_in))
+    w = jax.random.normal(jax.random.PRNGKey(1), (d_in, d_out)) / (d_in ** 0.5)
+    cfg = SparsityConfig(sparsity, m=None, tile=tile, format="compressed_xla")
+    meta = meta_for(d_in, d_out, cfg)
+    mask = colwise_nm_mask(w, sparsity, tile=meta.tile)
+    values, idx = pack_colwise(w, mask, meta)
+
+    @jax.jit
+    def f(x):
+        xg = jnp.take(x, idx, axis=-1)
+        return jnp.einsum("btk,tkf->btf", xg, values)
+
+    return median_wall_us(lambda: f(x), iters=iters, warmup=1)
+
+
+def enumerate_candidates(d_in: int, d_out: int) -> List[Candidate]:
+    tiles = sorted({t for t in (32, 64, 128, 256, 512, d_out) if d_out % t == 0})
+    blocks = [(128, 128), (256, 128), (128, 256), (512, 128)]
+    out = []
+    for t in tiles:
+        for bb, bk in blocks:
+            vm = _pallas_vmem(bb, bk, d_in, min(t, 512))
+            out.append(Candidate(tile=t, block_b=bb, block_k=bk,
+                                 vmem_bytes=vm, feasible=vm <= VMEM_BYTES))
+    return out
+
+
+class Tuner:
+    """Block-geometry auto-tuner over (tile, block_b, block_k) candidates.
+
+    Backed by a :class:`ProfileDB`, so selections are versioned, fingerprinted
+    and atomically persisted; a seed-era ``tuning_cache.json`` (bare dict, no
+    version key) is invalidated on load instead of silently reused.
+    """
+
+    def __init__(self, cache_path: str = "artifacts/tuning_cache.json"):
+        self.db = ProfileDB(path=cache_path, autosave=True)
+        self.path = self.db.path
+
+    @property
+    def cache(self) -> Dict[str, Dict]:
+        return dict(self.db._entries)
+
+    def _key(self, batch, d_in, d_out, sparsity) -> str:
+        return f"b{batch}_i{d_in}_o{d_out}_s{int(sparsity * 100)}"
+
+    def tune(self, batch: int, d_in: int, d_out: int, sparsity: float = 0.5,
+             profile: bool = True) -> Dict:
+        """Profile candidates; returns the winning config (cached).
+
+        ``profile=False`` skips wall-clocking and falls back to the
+        smallest-VMEM feasible candidate (a pure-static selection for hosts
+        where profiling is unavailable or disabled).
+        """
+        key = self._key(batch, d_in, d_out, sparsity)
+        cached = self.db.get(key)
+        if cached is not None:
+            return cached
+        cands = enumerate_candidates(d_in, d_out)
+        feasible = [c for c in cands if c.feasible]
+        if not feasible:
+            min_vm = min(c.vmem_bytes for c in cands) if cands else 0
+            raise TuningError(
+                f"no feasible kernel candidate for shape batch={batch}, "
+                f"d_in={d_in}, d_out={d_out}, sparsity={sparsity}: smallest "
+                f"candidate needs {min_vm} B of VMEM (budget {VMEM_BYTES} B)")
+        if not profile:
+            best = min(feasible, key=lambda c: (c.vmem_bytes, c.tile))
+        else:
+            best = None
+            tried_tiles = set()
+            for c in feasible:
+                if c.tile not in tried_tiles:
+                    # wall time depends on the tile (XLA path); block geometry
+                    # is scored analytically (VMEM pressure => prefer bigger
+                    # blocks while they fit, like the paper prefers higher LMUL)
+                    c.wall_us = _time_xla_candidate(batch, d_in, d_out, sparsity, c.tile)
+                    tried_tiles.add(c.tile)
+                wall = c.wall_us or next(
+                    (o.wall_us for o in feasible if o.tile == c.tile and o.wall_us),
+                    1e9,
+                )
+                c.score = wall * (1.0 + c.vmem_bytes / VMEM_BYTES * 0.1)
+                if best is None or c.score < best.score:
+                    best = c
+        result = {
+            "tile": best.tile, "block_b": best.block_b, "block_k": best.block_k,
+            "wall_us": best.wall_us, "vmem_bytes": best.vmem_bytes,
+        }
+        self.db.put(key, result)
+        return result
+
+    def tuned_tile(self, batch: int, d_in: int, d_out: int, sparsity: float = 0.5) -> int:
+        return int(self.tune(batch, d_in, d_out, sparsity)["tile"])

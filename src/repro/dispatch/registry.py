@@ -1,0 +1,419 @@
+"""Operator registry: the candidate implementations behind each logical op.
+
+AITemplate keeps, per operator, a list of generated kernels plus a profiler
+that races them on the target; TensorRT-LLM hides per-phase implementations
+behind one operator facade.  This registry is the analogous single
+registration point for this repo: a logical op (``linear``, ``conv``) maps to
+a list of :class:`ImplSpec` candidates, each declaring
+
+  * ``requires``   — which param-dict keys it can execute from (a compressed
+    layer can only run compressed candidates; a dense layer only dense ones),
+  * ``feasible``   — a static predicate over the :class:`OpKey` (VMEM budget,
+    divisibility, backend availability) returning (ok, reason),
+  * ``vmem_bytes`` — analytic footprint used for tie-breaks and fallbacks,
+  * ``apply``      — how to execute the layer's params on an input,
+  * ``make_bench`` — how to synthesize a self-contained benchmark closure for
+    the profiler (operands built from the key alone, no real params needed).
+
+New kernels/backends register here once and every call site that consults
+``repro.dispatch.best_impl`` picks them up — no per-call-site if/else chains.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+VMEM_BYTES = 16 * 2 ** 20  # ~16 MB usable per TPU core (paper §3.3 analog)
+
+
+def bucket_batch(n: int) -> int:
+    """Round a leading-dim size up to a power of two (min 8) so the profile
+    DB is keyed by a bounded family of batch buckets, not every exact size."""
+    b = 8
+    while b < n:
+        b *= 2
+    return b
+
+
+def bucket_dim(n: int) -> int:
+    """Power-of-two bucket for the reduction dim of linear keys.  Both the
+    trace-time call site (which knows the exact d_in from the activation) and
+    the build-time params scan (which can only bound d_in by max kept index)
+    land in the same bucket, so their DB tokens agree."""
+    return bucket_batch(n)
+
+
+@dataclasses.dataclass(frozen=True)
+class OpKey:
+    """Hashable identity of one operator instance (static shapes only)."""
+
+    op: str          # "linear" | "conv"
+    batch: int       # bucketed leading-dim rows (GEMM) / output positions (conv)
+    d_in: int        # reduction dim (linear) / kh*kw*c (conv)
+    d_out: int
+    k_kept: int      # kept reduction indices per tile (== d_in when dense)
+    tile: int        # output-feature tile width sharing one index set
+    dtype: str = "f32"
+    extra: Tuple[Tuple[str, int], ...] = ()
+
+    @property
+    def token(self) -> str:
+        """Stable string key for the profile DB."""
+        base = (f"{self.op}|b{self.batch}|i{self.d_in}|o{self.d_out}"
+                f"|k{self.k_kept}|t{self.tile}|{self.dtype}")
+        for k, v in self.extra:
+            base += f"|{k}{v}"
+        return base
+
+    def get(self, name: str, default: int = 0) -> int:
+        for k, v in self.extra:
+            if k == name:
+                return v
+        return default
+
+
+def _dtype_tag(dtype) -> str:
+    import numpy as np
+
+    try:
+        name = np.dtype(dtype).name  # accepts instances, classes, strings
+    except TypeError:
+        name = str(dtype)
+    return {"float32": "f32", "bfloat16": "bf16", "float16": "f16"}.get(
+        name, name)
+
+
+def linear_key(batch: int, d_in: int, d_out: int, k_kept: int, tile: int,
+               dtype="float32") -> OpKey:
+    return OpKey(op="linear", batch=bucket_batch(batch), d_in=bucket_dim(d_in),
+                 d_out=d_out, k_kept=k_kept, tile=tile, dtype=_dtype_tag(dtype))
+
+
+def linear_key_from(x_shape: Sequence[int], values_shape: Sequence[int],
+                    dtype="float32") -> OpKey:
+    """OpKey from an activation shape and a compressed values shape.
+
+    ``values_shape`` may carry scan/stacked leading dims; only the trailing
+    [n_tiles, k_kept, tile] matter for dispatch.
+    """
+    n_tiles, k_kept, tile = values_shape[-3:]
+    rows = 1
+    for s in x_shape[:-1]:
+        rows *= int(s)
+    return linear_key(max(rows, 1), int(x_shape[-1]), int(n_tiles * tile),
+                      int(k_kept), int(tile), dtype)
+
+
+def conv_key(c: int, h: int, w: int, o: int, kh: int, kw: int, stride: int,
+             pad: int, k_kept: int, tile: int, v: int = 128,
+             dtype="float32", batch: int = 1) -> OpKey:
+    n_pos_h = (h + 2 * pad - kh) // stride + 1
+    n_pos_w = (w + 2 * pad - kw) // stride + 1
+    return OpKey(
+        op="conv", batch=bucket_batch(max(batch * n_pos_h * n_pos_w, 1)),
+        d_in=kh * kw * c, d_out=o, k_kept=k_kept, tile=tile,
+        dtype=_dtype_tag(dtype),
+        extra=(("b", batch), ("c", c), ("h", h), ("w", w), ("kh", kh),
+               ("kw", kw), ("s", stride), ("p", pad), ("v", v)),
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class ImplSpec:
+    """One candidate implementation of a logical op."""
+
+    name: str
+    op: str
+    backend: str                       # "xla" | "pallas"
+    requires: frozenset                # param keys it executes from
+    priority: int                      # heuristic rank (lower preferred)
+    feasible: Callable[[OpKey], Tuple[bool, str]]
+    vmem_bytes: Callable[[OpKey], int]
+    apply: Optional[Callable] = None   # (params, x) -> y
+    make_bench: Optional[Callable] = None  # key -> zero-arg timed closure
+
+    def __repr__(self):
+        return f"ImplSpec({self.op}:{self.name}, backend={self.backend})"
+
+
+class OperatorRegistry:
+    def __init__(self):
+        self._impls: Dict[str, Dict[str, ImplSpec]] = {}
+        self.generation = 0  # bumped on register(); invalidates dispatch memos
+
+    def register(self, spec: ImplSpec) -> ImplSpec:
+        self._impls.setdefault(spec.op, {})[spec.name] = spec
+        self.generation += 1
+        return spec
+
+    def ops(self) -> List[str]:
+        return sorted(self._impls)
+
+    def get(self, op: str, name: str) -> ImplSpec:
+        try:
+            return self._impls[op][name]
+        except KeyError:
+            known = sorted(self._impls.get(op, {}))
+            raise KeyError(
+                f"no impl {name!r} registered for op {op!r}; known: {known}"
+            ) from None
+
+    def candidates(self, op: str, *, param_keys=None) -> List[ImplSpec]:
+        """All candidates for an op, optionally filtered to those executable
+        from a given param-dict key set.
+
+        Only *most-specific* matches are kept: a candidate whose ``requires``
+        is a strict subset of another executable candidate's is dropped, so
+        e.g. ``dense`` (requires {w}) can never be selected for a masked
+        layer ({w, mask}) and silently ignore the mask.
+        """
+        specs = list(self._impls.get(op, {}).values())
+        if param_keys is not None:
+            pk = frozenset(param_keys)
+            specs = [s for s in specs if s.requires <= pk]
+            specs = [s for s in specs
+                     if not any(s.requires < o.requires for o in specs)]
+        return specs
+
+    def feasible(self, key: OpKey, *, param_keys=None) -> List[ImplSpec]:
+        return [s for s in self.candidates(key.op, param_keys=param_keys)
+                if s.feasible(key)[0]]
+
+
+REGISTRY = OperatorRegistry()
+
+
+# ---------------------------------------------------------------------------
+# Built-in linear candidates
+# ---------------------------------------------------------------------------
+
+
+def _always(key: OpKey) -> Tuple[bool, str]:
+    return True, "ok"
+
+
+def _no_vmem(key: OpKey) -> int:
+    return 0
+
+
+def _pallas_feasible(key: OpKey) -> Tuple[bool, str]:
+    if key.d_out % key.tile != 0:
+        return False, f"d_out={key.d_out} not divisible by tile={key.tile}"
+    if key.tile % 8 != 0:
+        return False, f"tile={key.tile} not a multiple of 8 (sublane)"
+    vm = _pallas_vmem(key)
+    if vm > VMEM_BYTES:
+        return False, f"VMEM {vm} > budget {VMEM_BYTES}"
+    return True, "ok"
+
+
+def _pallas_vmem(key: OpKey) -> int:
+    from repro.kernels.colwise_nm.kernel import vmem_bytes
+
+    block_b = min(128, key.batch)
+    block_k = min(128, key.k_kept)
+    return vmem_bytes(block_b, block_k, key.d_in, min(key.tile, 512))
+
+
+def _jnp_dtype(tag: str):
+    import jax.numpy as jnp
+
+    return {"f32": jnp.float32, "bf16": jnp.bfloat16,
+            "f16": jnp.float16}.get(tag, jnp.float32)
+
+
+def _rand(shape, seed=0, dtype_tag: str = "f32"):
+    import jax
+
+    x = jax.random.normal(jax.random.PRNGKey(seed), shape)
+    return x.astype(_jnp_dtype(dtype_tag))
+
+
+def _synth_compressed(key: OpKey):
+    """Strided synthetic (values, idx) matching the key's geometry/dtype."""
+    import jax.numpy as jnp
+
+    n_tiles = key.d_out // key.tile
+    values = _rand((n_tiles, key.k_kept, key.tile), seed=1,
+                   dtype_tag=key.dtype) / (key.k_kept ** 0.5)
+    values = values.astype(_jnp_dtype(key.dtype))
+    stride = max(key.d_in // key.k_kept, 1)
+    idx1 = (jnp.arange(key.k_kept, dtype=jnp.int32) * stride) % key.d_in
+    idx = jnp.broadcast_to(jnp.sort(idx1)[None, :], (n_tiles, key.k_kept))
+    return values, jnp.asarray(idx, jnp.int32)
+
+
+def _bench_linear_xla(key: OpKey):
+    import jax
+
+    from repro.core.sparse_linear import forward_compressed_xla
+
+    x = _rand((key.batch, key.d_in), dtype_tag=key.dtype)
+    values, idx = _synth_compressed(key)
+    f = jax.jit(lambda x: forward_compressed_xla(x, values, idx))
+    return lambda: f(x)
+
+
+def _bench_linear_pallas(key: OpKey):
+    import jax
+
+    from repro.kernels.colwise_nm import ops as cops
+
+    x = _rand((key.batch, key.d_in), dtype_tag=key.dtype)
+    values, idx = _synth_compressed(key)
+    # jitted like every other candidate's closure: profiling must compare
+    # steady-state (traced) execution, not eager per-op dispatch overhead
+    f = jax.jit(lambda x: cops.colwise_nm_matmul(x, values, idx))
+    return lambda: f(x)
+
+
+def _bench_linear_dense(key: OpKey):
+    import jax
+
+    x = _rand((key.batch, key.d_in), dtype_tag=key.dtype)
+    w = _rand((key.d_in, key.d_out), seed=2, dtype_tag=key.dtype) / (key.d_in ** 0.5)
+    f = jax.jit(lambda x: x @ w)
+    return lambda: f(x)
+
+
+def _apply_linear_xla(params, x):
+    from repro.core.sparse_linear import forward_compressed_xla
+
+    return forward_compressed_xla(x, params["values"], params["idx"])
+
+
+def _apply_linear_pallas(params, x):
+    from repro.kernels.colwise_nm import ops as cops
+
+    return cops.colwise_nm_matmul(x, params["values"], params["idx"])
+
+
+def _apply_linear_masked(params, x):
+    from repro.core.sparse_linear import forward_masked
+
+    return forward_masked(x, params["w"], params["mask"])
+
+
+def _apply_linear_dense(params, x):
+    return x @ params["w"]
+
+
+REGISTRY.register(ImplSpec(
+    name="compressed_xla", op="linear", backend="xla",
+    requires=frozenset({"values", "idx"}), priority=10,
+    feasible=_always, vmem_bytes=_no_vmem,
+    apply=_apply_linear_xla, make_bench=_bench_linear_xla,
+))
+
+REGISTRY.register(ImplSpec(
+    name="compressed_pallas", op="linear", backend="pallas",
+    requires=frozenset({"values", "idx"}), priority=10,
+    feasible=_pallas_feasible, vmem_bytes=_pallas_vmem,
+    apply=_apply_linear_pallas, make_bench=_bench_linear_pallas,
+))
+
+REGISTRY.register(ImplSpec(
+    name="masked", op="linear", backend="xla",
+    requires=frozenset({"w", "mask"}), priority=20,
+    feasible=_always, vmem_bytes=_no_vmem,
+    apply=_apply_linear_masked, make_bench=_bench_linear_dense,
+))
+
+REGISTRY.register(ImplSpec(
+    name="dense", op="linear", backend="xla",
+    requires=frozenset({"w"}), priority=30,
+    feasible=_always, vmem_bytes=_no_vmem,
+    apply=_apply_linear_dense, make_bench=_bench_linear_dense,
+))
+
+
+# ---------------------------------------------------------------------------
+# Built-in conv candidates (GEMM view: [P, KhKwC] x [KhKwC, O])
+# ---------------------------------------------------------------------------
+
+
+def _synth_conv_input(key: OpKey):
+    c, h, w = key.get("c"), key.get("h"), key.get("w", key.get("h"))
+    b = max(key.get("b", 1), 1)
+    return _rand((c, b, h, w), seed=3, dtype_tag=key.dtype)
+
+
+def _conv_args(key: OpKey):
+    return dict(kh=key.get("kh"), kw=key.get("kw"), stride=key.get("s", 1),
+                pad=key.get("p", 0), v=key.get("v", 128))
+
+
+def _bench_conv_dense(key: OpKey):
+    import jax
+
+    from repro.kernels.conv_gemm.ref import conv2d_cnhw_ref
+
+    x = _synth_conv_input(key)
+    a = _conv_args(key)
+    wt = _rand((key.d_out, a["kh"], a["kw"], key.get("c")), seed=4,
+                dtype_tag=key.dtype)
+    f = jax.jit(lambda x: conv2d_cnhw_ref(x, wt, stride=a["stride"], pad=a["pad"]))
+    return lambda: f(x)
+
+
+def _bench_conv_im2col_dense(key: OpKey):
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels.im2col_pack.ops import im2col_then_pack
+
+    x = _synth_conv_input(key)
+    a = _conv_args(key)
+    w = _rand((key.d_in, key.d_out), seed=5, dtype_tag=key.dtype) / (key.d_in ** 0.5)
+
+    @jax.jit
+    def f(x):
+        strips = im2col_then_pack(x, kh=a["kh"], kw=a["kw"], stride=a["stride"],
+                                  pad=a["pad"], v=a["v"])
+        xt = strips.transpose(0, 2, 1).reshape(-1, key.d_in)
+        return xt @ w
+
+    return lambda: f(x)
+
+
+def _bench_conv_sparse(key: OpKey, use_pallas: bool):
+    import jax
+
+    from repro.kernels.conv_gemm.ops import conv2d_colwise_sparse
+
+    x = _synth_conv_input(key)
+    a = _conv_args(key)
+    values, idx = _synth_compressed(key)
+    f = jax.jit(lambda x: conv2d_colwise_sparse(
+        x, values, idx, kh=a["kh"], kw=a["kw"], stride=a["stride"],
+        pad=a["pad"], v=a["v"], use_pallas=use_pallas))
+    return lambda: f(x)
+
+
+REGISTRY.register(ImplSpec(
+    name="dense_conv", op="conv", backend="xla",
+    requires=frozenset({"w"}), priority=30,
+    feasible=_always, vmem_bytes=_no_vmem,
+    make_bench=_bench_conv_dense,
+))
+
+REGISTRY.register(ImplSpec(
+    name="im2col_dense_gemm", op="conv", backend="xla",
+    requires=frozenset({"w"}), priority=20,
+    feasible=_always, vmem_bytes=_no_vmem,
+    make_bench=_bench_conv_im2col_dense,
+))
+
+REGISTRY.register(ImplSpec(
+    name="im2col_sparse_xla", op="conv", backend="xla",
+    requires=frozenset({"values", "idx"}), priority=10,
+    feasible=_always, vmem_bytes=_no_vmem,
+    make_bench=lambda key: _bench_conv_sparse(key, use_pallas=False),
+))
+
+REGISTRY.register(ImplSpec(
+    name="im2col_sparse_pallas", op="conv", backend="pallas",
+    requires=frozenset({"values", "idx"}), priority=10,
+    feasible=_pallas_feasible, vmem_bytes=_pallas_vmem,
+    make_bench=lambda key: _bench_conv_sparse(key, use_pallas=True),
+))

@@ -30,6 +30,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.pltpu_compat import COMPILER_PARAMS as _COMPILER_PARAMS
+
 
 def _kernel(x_ref, idx_ref, v_ref, o_ref, acc_ref, *, n_kc: int, out_dtype, interpret: bool):
     kc = pl.program_id(2)
@@ -109,7 +111,7 @@ def colwise_nm_matmul_pallas(
         out_specs=pl.BlockSpec((block_b, tile), lambda i, t, kc: (i, t)),
         out_shape=jax.ShapeDtypeStruct((b_pad, n_tiles * tile), x.dtype),
         scratch_shapes=[pltpu.VMEM((block_b, tile), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_COMPILER_PARAMS(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,

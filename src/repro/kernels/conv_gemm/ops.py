@@ -46,10 +46,13 @@ def conv2d_colwise_sparse(
     stride: int = 1,
     pad: int = 0,
     v: int = 128,
-    use_pallas: bool = True,
+    use_pallas: Optional[bool] = None,
 ) -> jax.Array:
     """Sparse convolution: fused im2col+pack, then column-wise sparse GEMM.
 
+    ``use_pallas=None`` (the default) consults ``repro.dispatch`` for the
+    GEMM backend — profiled winner if the profile DB has this conv shape,
+    platform heuristic otherwise.  Pass True/False to force a backend.
     Returns CNHW output [O, B, Ho, Wo].
     """
     c, b, h, w = x_cnhw.shape
@@ -58,6 +61,15 @@ def conv2d_colwise_sparse(
     n_pos = b * ho * wo
     n_tiles, k_kept, tile = values.shape
     o = n_tiles * tile
+
+    if use_pallas is None:
+        from repro import dispatch as _dispatch
+
+        key = _dispatch.conv_key(c, h, w, o, kh, kw, stride, pad,
+                                 k_kept, tile, v=v, dtype=x_cnhw.dtype,
+                                 batch=b)
+        spec = _dispatch.best_impl(key, param_keys=("values", "idx"))
+        use_pallas = spec.backend == "pallas"
 
     strips = im2col_pack(x_cnhw, kh=kh, kw=kw, stride=stride, pad=pad, v=v)
     # strips: [n_strips, K, V]; GEMM per strip on the transposed strip so the

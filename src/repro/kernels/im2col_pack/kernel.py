@@ -22,6 +22,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.pltpu_compat import COMPILER_PARAMS as _COMPILER_PARAMS
+
 from repro.kernels.im2col_pack.ref import out_size
 
 
@@ -91,7 +93,7 @@ def im2col_pack_pallas(
             (1, 1, v), lambda s, k, cc, _c=c: (s, k * _c + cc, 0)
         ),
         out_shape=jax.ShapeDtypeStruct((n_strips, kh * kw * c, v), x.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_COMPILER_PARAMS(
             dimension_semantics=("parallel", "arbitrary", "arbitrary"),
         ),
         interpret=interpret,

@@ -1,0 +1,8 @@
+"""Shared Pallas-TPU API compatibility shims for the kernel modules.
+
+jax renamed ``TPUCompilerParams`` -> ``CompilerParams`` across 0.4.x/0.5.x;
+accept either so the kernels run on whatever toolchain the image bakes in.
+"""
+from jax.experimental.pallas import tpu as pltpu
+
+COMPILER_PARAMS = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams

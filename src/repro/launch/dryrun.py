@@ -22,7 +22,7 @@ from repro.roofline.analysis import (  # noqa: E402
     Roofline,
     model_flops_for,
 )
-from repro.roofline.hlo_analyzer import analyze_hlo  # noqa: E402
+from repro.roofline.hlo_analyzer import analyze_hlo, xla_cost_analysis  # noqa: E402
 from repro.sharding import RULES, ShardingCtx, use_ctx  # noqa: E402
 
 
@@ -115,7 +115,7 @@ def lower_cell(arch: str, shape: str, mesh, sparsity: float, fmt: str, attn: str
 
 def analyze(cfg, cell, lowered, compiled, mesh, sparsity: float):
     chips = mesh.devices.size
-    cost = compiled.cost_analysis() or {}
+    cost = xla_cost_analysis(compiled)
     flops = float(cost.get("flops", 0.0))
     hbm_bytes = float(cost.get("bytes accessed", 0.0))
     try:

@@ -57,6 +57,15 @@ _OP_RE = re.compile(r"([\w\-]+)\(")
 _COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->\s*.+\{\s*$")
 
 
+def xla_cost_analysis(compiled) -> Dict[str, float]:
+    """Normalized ``compiled.cost_analysis()``: jax has returned both a dict
+    and a one-element list of dicts across 0.4.x/0.5.x; always give a dict."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return cost or {}
+
+
 def dtype_bytes(dt: str) -> float:
     return _DTYPE_BYTES.get(dt, 4)
 

@@ -24,6 +24,11 @@ class ServeConfig:
     temperature: float = 0.0  # 0 => greedy
     eos_id: Optional[int] = None
     seed: int = 0
+    # profile sparse-operator candidates at engine build (otherwise the plan
+    # is resolved from the existing profile DB / platform heuristic; also
+    # switchable via REPRO_DISPATCH_PROFILE=1)
+    profile_dispatch: Optional[bool] = None
+    dispatch_batch_hint: int = 8
 
 
 class Engine:
@@ -31,6 +36,17 @@ class Engine:
         self.cfg = cfg
         self.params = params
         self.scfg = serve_cfg
+        # Build-time operator dispatch: resolve (and optionally profile) the
+        # implementation for every compressed layer shape before tracing, so
+        # decode-shaped lookups hit a warm profile DB and every process
+        # serving this model picks identical backends.  Prefill rows bucket
+        # by batch*prompt_len and fall back to the heuristic until profiled
+        # (per-phase dispatch is a ROADMAP open item).
+        from repro import dispatch as _dispatch
+
+        self.dispatch_plan = _dispatch.plan_params(
+            params, batch_hint=serve_cfg.dispatch_batch_hint,
+            profile=serve_cfg.profile_dispatch)
         self._decode = jax.jit(reg.decode_fn(cfg), donate_argnums=(1,))
         self._prefill = jax.jit(reg.prefill_fn(cfg))
 

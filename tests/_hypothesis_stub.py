@@ -1,0 +1,114 @@
+"""Minimal deterministic stand-in for the `hypothesis` API this suite uses.
+
+The container may not ship `hypothesis`; rather than losing collection of
+every module that imports it (`test_pruning`, `test_sharding_rules`,
+`test_substrate`), `conftest.py` installs this stub into ``sys.modules`` when
+the real package is absent.  Property tests then still *run* — each
+``@given`` draws a small, deterministically-seeded set of examples instead of
+hypothesis' adaptive search.  When the real package is installed the stub is
+never used and full property testing is active.
+
+Supported surface (extend as tests need it): ``given``, ``settings``,
+``strategies.sampled_from / integers / lists / floats / booleans``.
+"""
+from __future__ import annotations
+
+import functools
+import random
+
+STUB_MAX_EXAMPLES = 5  # cap per test: the stub trades coverage for runtime
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def map(self, fn):
+        return _Strategy(lambda rng: fn(self._draw(rng)))
+
+    def filter(self, pred):
+        def draw(rng):
+            for _ in range(1000):
+                v = self._draw(rng)
+                if pred(v):
+                    return v
+            raise ValueError("stub strategy filter never satisfied")
+
+        return _Strategy(draw)
+
+
+class _Strategies:
+    @staticmethod
+    def sampled_from(seq):
+        seq = list(seq)
+        return _Strategy(lambda rng: seq[rng.randrange(len(seq))])
+
+    @staticmethod
+    def integers(min_value=0, max_value=2 ** 31 - 1):
+        return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+    @staticmethod
+    def floats(min_value=0.0, max_value=1.0, **_kw):
+        return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+    @staticmethod
+    def booleans():
+        return _Strategy(lambda rng: bool(rng.randrange(2)))
+
+    @staticmethod
+    def lists(elements, min_size=0, max_size=10, **_kw):
+        def draw(rng):
+            n = rng.randint(min_size, max_size)
+            return [elements._draw(rng) for _ in range(n)]
+
+        return _Strategy(draw)
+
+
+strategies = _Strategies()
+
+
+def settings(**kw):
+    """Records the requested settings on the test; `given` honours
+    max_examples (capped) and ignores the rest (deadline etc.)."""
+
+    def deco(fn):
+        fn._stub_settings = kw
+        return fn
+
+    return deco
+
+
+def given(*strats, **kwstrats):
+    def deco(fn):
+        cfg = getattr(fn, "_stub_settings", {})
+        n = min(int(cfg.get("max_examples", STUB_MAX_EXAMPLES)), STUB_MAX_EXAMPLES)
+
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            rng = random.Random(fn.__qualname__)  # deterministic per test
+            for _ in range(max(n, 1)):
+                drawn = [s._draw(rng) for s in strats]
+                kdrawn = {k: s._draw(rng) for k, s in kwstrats.items()}
+                fn(*args, *drawn, **kwargs, **kdrawn)
+
+        # pytest follows __wrapped__ when inspecting the signature and would
+        # treat the drawn parameters as fixtures to inject; hide it so the
+        # wrapper's (*args, **kwargs) signature is what collection sees
+        del wrapper.__wrapped__
+        wrapper.hypothesis_stub = True
+        return wrapper
+
+    return deco
+
+
+class HealthCheck:
+    too_slow = data_too_large = filter_too_much = all = None
+
+
+def assume(condition):
+    if not condition:
+        raise _StubAssumeError("stub assume() failed — refine the strategy")
+
+
+class _StubAssumeError(AssertionError):
+    pass
