@@ -1,7 +1,7 @@
 PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 export PYTHONPATH
 
-.PHONY: test bench bench-quick ci
+.PHONY: test bench bench-quick serve-smoke ci
 
 test:            ## tier-1 test suite
 	python -m pytest -x -q
@@ -12,4 +12,8 @@ bench:           ## full benchmark harness (all paper figures)
 bench-quick:     ## smoke subset: conv layers + dispatch, 3 iters
 	python -m benchmarks.run --quick
 
-ci: test bench-quick  ## what scripts/ci.sh runs
+serve-smoke:     ## continuous-batching scheduler CLI smoke
+	python -m repro.launch.serve --arch smollm-360m --smoke --continuous \
+	    --requests 6 --slots 3 --prompt-len 12 --new-tokens 8 --prefill-chunk 8
+
+ci: test serve-smoke bench-quick  ## what scripts/ci.sh runs

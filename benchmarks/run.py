@@ -10,6 +10,7 @@ Prints ``name,us_per_call,derived`` CSV.  Mapping to the paper:
   bench_layout       -> Fig. 12: CNHW vs NHWC
   bench_roofline     -> assignment §Roofline from the dry-run artifacts
   bench_dispatch     -> §3.3: dispatched vs fixed-backend operator selection
+  bench_serve_scheduler -> continuous-batching scheduler vs static engine
 
 ``--quick`` runs a smoke subset (conv layers + dispatch, 3 iters) fast
 enough for CI / pre-commit, so dispatch-latency regressions are caught
@@ -33,6 +34,7 @@ def _modules():
         bench_fusion,
         bench_layout,
         bench_roofline,
+        bench_serve_scheduler,
     )
 
     return [
@@ -44,6 +46,7 @@ def _modules():
         ("fig12_layout", bench_layout),
         ("roofline", bench_roofline),
         ("dispatch", bench_dispatch),
+        ("serve_scheduler", bench_serve_scheduler),
     ]
 
 

@@ -8,5 +8,9 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 echo "== tier-1 tests =="
 python -m pytest -x -q
 
+echo "== serve scheduler smoke =="
+python -m repro.launch.serve --arch smollm-360m --smoke --continuous \
+    --requests 6 --slots 3 --prompt-len 12 --new-tokens 8 --prefill-chunk 8
+
 echo "== quick benchmarks =="
 python -m benchmarks.run --quick

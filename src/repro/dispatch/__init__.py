@@ -27,11 +27,13 @@ from repro.dispatch.profiler import (  # noqa: F401
 )
 from repro.dispatch.dispatch import (  # noqa: F401
     best_impl,
+    current_phase,
     dispatch_enabled,
     ensure_profiled,
     get_db,
     iter_compressed_layers,
     linear_impl,
+    phase_scope,
     plan_params,
     set_db,
 )

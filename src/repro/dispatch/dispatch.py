@@ -23,8 +23,9 @@ populated DB run :func:`ensure_profiled` / :func:`plan_params` at build time
 """
 from __future__ import annotations
 
+import contextlib
 import os
-from typing import Dict, Iterable, Optional
+from typing import Dict, Iterable, Mapping, Optional
 
 from repro.dispatch.profiler import ProfileDB, TuningError, profile_op
 from repro.dispatch.registry import (
@@ -59,6 +60,36 @@ def set_db(db: Optional[ProfileDB]) -> None:
 
 def dispatch_enabled() -> bool:
     return os.environ.get("REPRO_DISPATCH", "on").lower() not in ("off", "0", "false")
+
+
+# ---------------------------------------------------------------------------
+# Serving-phase scope
+# ---------------------------------------------------------------------------
+
+# Ambient serving phase ("prefill" | "decode" | None).  The serve Engine wraps
+# its traced step functions in phase_scope so every linear_apply call site
+# inside the trace resolves a phase-tagged OpKey without threading a phase
+# argument through the whole model stack.  jit tracing runs the wrapped Python
+# function synchronously, so a plain module global is sufficient (retraces go
+# through the wrapper again).
+_PHASE: Optional[str] = None
+
+
+@contextlib.contextmanager
+def phase_scope(phase: Optional[str]):
+    """Tag dispatch lookups in this (tracing) scope with a serving phase."""
+    global _PHASE
+    prev = _PHASE
+    _PHASE = phase or None
+    try:
+        yield
+    finally:
+        _PHASE = prev
+
+
+def current_phase() -> str:
+    """The ambient serving phase ("" outside any phase_scope)."""
+    return _PHASE or ""
 
 
 def _env_force() -> Optional[str]:
@@ -180,10 +211,18 @@ def ensure_profiled(key: OpKey, *, param_keys=None, db: Optional[ProfileDB] = No
 
 
 def linear_impl(x_shape, values_shape, dtype="float32", *,
-                force: Optional[str] = None) -> ImplSpec:
+                force: Optional[str] = None,
+                phase: Optional[str] = None) -> ImplSpec:
     """Implementation for a compressed linear given activation/values shapes
-    (the hot path used by ``core.sparse_linear.linear_apply``)."""
-    key = linear_key_from(x_shape, values_shape, dtype)
+    (the hot path used by ``core.sparse_linear.linear_apply``).
+
+    ``phase`` defaults to the ambient :func:`phase_scope` tag, so call sites
+    traced inside the serve Engine's prefill/decode steps resolve the
+    phase-specialized entry without any signature changes.
+    """
+    if phase is None:
+        phase = current_phase()
+    key = linear_key_from(x_shape, values_shape, dtype, phase=phase)
     return best_impl(key, param_keys=("values", "idx"), force=force)
 
 
@@ -206,13 +245,21 @@ def iter_compressed_layers(tree, prefix: str = ""):
 
 
 def plan_params(params, *, batch_hint: int = 8, db: Optional[ProfileDB] = None,
-                profile: Optional[bool] = None) -> Dict[str, str]:
+                profile: Optional[bool] = None,
+                phase_hints: Optional[Mapping[str, int]] = None) -> Dict[str, str]:
     """Build-time dispatch plan for a model's params tree.
 
     Scans for compressed layers, resolves (and optionally profiles) the
     implementation for each distinct OpKey, and returns {token: impl name}.
     Called by the serve ``Engine`` so the first traced forward already sees a
     warm DB.  ``profile`` defaults to ``REPRO_DISPATCH_PROFILE``.
+
+    ``phase_hints`` maps serving-phase tags to expected operand row counts,
+    e.g. ``{"prefill": batch * prompt_len, "decode": batch}``; each phase gets
+    its own phase-tagged OpKey (and, when profiling, its own DB entry), so
+    prefill and decode shapes are profiled separately and the engine can pin
+    per-phase implementations.  Without it the single ``batch_hint`` plans
+    phase-agnostic keys exactly as before.
     """
     if not dispatch_enabled():
         # legacy fixed routing ignores the plan; skip the tree walk and the
@@ -221,6 +268,7 @@ def plan_params(params, *, batch_hint: int = 8, db: Optional[ProfileDB] = None,
     if profile is None:
         profile = _profile_on_miss()
     the_db = db if db is not None else get_db()
+    hints: Mapping[str, int] = phase_hints if phase_hints else {"": batch_hint}
     plan: Dict[str, str] = {}
     for _path, values, idx in iter_compressed_layers(params):
         n_tiles, k_kept, tile = (int(s) for s in values.shape[-3:])
@@ -232,15 +280,18 @@ def plan_params(params, *, batch_hint: int = 8, db: Optional[ProfileDB] = None,
         # the forward never looks up and that layer falls back to the
         # heuristic — a missed warm-up, never a wrong result.
         d_in = int(idx.max()) + 1 if getattr(idx, "size", 0) else k_kept
-        key = linear_key(batch_hint, d_in, n_tiles * tile, k_kept, tile,
-                         dtype=getattr(values, "dtype", "float32"))
-        if key.token in plan:
-            continue
-        if profile and key.token not in the_db:
-            try:
-                ensure_profiled(key, param_keys=("values", "idx"), db=the_db)
-            except TuningError:
-                pass
-        plan[key.token] = best_impl(
-            key, param_keys=("values", "idx"), db=the_db).name
+        for ph, rows in hints.items():
+            key = linear_key(rows, d_in, n_tiles * tile, k_kept, tile,
+                             dtype=getattr(values, "dtype", "float32"),
+                             phase=ph)
+            if key.token in plan:
+                continue
+            if profile and key.token not in the_db:
+                try:
+                    ensure_profiled(key, param_keys=("values", "idx"),
+                                    db=the_db)
+                except TuningError:
+                    pass
+            plan[key.token] = best_impl(
+                key, param_keys=("values", "idx"), db=the_db).name
     return plan

@@ -55,6 +55,13 @@ class OpKey:
     tile: int        # output-feature tile width sharing one index set
     dtype: str = "f32"
     extra: Tuple[Tuple[str, int], ...] = ()
+    # serving-phase tag ("prefill" | "decode"); "" = phase-agnostic.  The same
+    # layer weights see [B*S]-row operands during prefill and [B]-row operands
+    # during decode, and the profiled winner differs between the two shapes
+    # (TensorRT-LLM-style per-phase operator specialization), so phase-tagged
+    # keys get distinct profile-DB entries.  Untagged keys keep the exact
+    # pre-phase token format, so existing DBs stay valid.
+    phase: str = ""
 
     @property
     def token(self) -> str:
@@ -63,6 +70,8 @@ class OpKey:
                 f"|k{self.k_kept}|t{self.tile}|{self.dtype}")
         for k, v in self.extra:
             base += f"|{k}{v}"
+        if self.phase:
+            base += f"|ph:{self.phase}"
         return base
 
     def get(self, name: str, default: int = 0) -> int:
@@ -84,13 +93,14 @@ def _dtype_tag(dtype) -> str:
 
 
 def linear_key(batch: int, d_in: int, d_out: int, k_kept: int, tile: int,
-               dtype="float32") -> OpKey:
+               dtype="float32", phase: str = "") -> OpKey:
     return OpKey(op="linear", batch=bucket_batch(batch), d_in=bucket_dim(d_in),
-                 d_out=d_out, k_kept=k_kept, tile=tile, dtype=_dtype_tag(dtype))
+                 d_out=d_out, k_kept=k_kept, tile=tile, dtype=_dtype_tag(dtype),
+                 phase=phase)
 
 
 def linear_key_from(x_shape: Sequence[int], values_shape: Sequence[int],
-                    dtype="float32") -> OpKey:
+                    dtype="float32", phase: str = "") -> OpKey:
     """OpKey from an activation shape and a compressed values shape.
 
     ``values_shape`` may carry scan/stacked leading dims; only the trailing
@@ -101,7 +111,7 @@ def linear_key_from(x_shape: Sequence[int], values_shape: Sequence[int],
     for s in x_shape[:-1]:
         rows *= int(s)
     return linear_key(max(rows, 1), int(x_shape[-1]), int(n_tiles * tile),
-                      int(k_kept), int(tile), dtype)
+                      int(k_kept), int(tile), dtype, phase=phase)
 
 
 def conv_key(c: int, h: int, w: int, o: int, kh: int, kw: int, stride: int,

@@ -1,7 +1,15 @@
 """Serving launcher: batched generation with the column-wise N:M engine.
 
+Static batch (pads every request to the slowest sequence):
+
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b --smoke \
         --batch 4 --new-tokens 32 --sparsity 0.5
+
+Continuous batching (slot-based in-flight admission over a synthetic
+mixed-length request trace; --trace prints the admit/retire event log):
+
+    PYTHONPATH=src python -m repro.launch.serve --arch smollm-360m --smoke \
+        --continuous --requests 12 --slots 4 --trace
 """
 from __future__ import annotations
 
@@ -13,7 +21,61 @@ import numpy as np
 from repro.configs import get_config, smoke_config
 from repro.core.pruning import SparsityConfig
 from repro.models import registry as reg
-from repro.serve import Engine, ServeConfig
+from repro.serve import (
+    Engine,
+    Scheduler,
+    ServeConfig,
+    latency_percentiles,
+    synthetic_trace,
+)
+
+
+def build_engine(args) -> Engine:
+    scfg = SparsityConfig(sparsity=args.sparsity, m=None, tile=None,
+                          format="compressed_xla" if args.sparsity > 0 else "dense",
+                          min_dim=64 if args.smoke else 512)
+    cfg = (smoke_config(args.arch) if args.smoke else get_config(args.arch)).with_(
+        sparsity=scfg)
+    params, _ = reg.init_params(cfg, jax.random.PRNGKey(0))
+    return Engine(cfg, params, ServeConfig(max_new_tokens=args.new_tokens,
+                                           temperature=args.temperature))
+
+
+def run_static(args) -> None:
+    eng = build_engine(args)
+    cfg = eng.cfg
+    prompts = np.random.default_rng(0).integers(
+        0, cfg.vocab_size, (args.batch, args.prompt_len)).astype(np.int32)
+    eng.generate(prompts)  # compile
+    res = eng.generate(prompts)
+    print(f"arch={cfg.name} sparse={args.sparsity} batch={args.batch}")
+    print(f"prefill {res['prefill_s']*1e3:.1f} ms; decode {res['decode_tok_s']:.1f} tok/s")
+    for i, row in enumerate(res["tokens"][:2]):
+        print(f"  seq{i}: {row[:16].tolist()}")
+
+
+def run_continuous(args) -> None:
+    if args.requests < 1:
+        raise SystemExit("--continuous needs --requests >= 1")
+    eng = build_engine(args)
+    cfg = eng.cfg
+    trace = synthetic_trace(
+        args.requests, seed=0, vocab=cfg.vocab_size,
+        prompt_lens=(max(args.prompt_len // 4, 1), args.prompt_len),
+        new_tokens=(max(args.new_tokens // 4, 1), args.new_tokens))
+    sched = Scheduler(eng, n_slots=args.slots, prefill_chunk=args.prefill_chunk)
+    log = print if args.trace else None
+    completions = sched.run(trace, log_fn=log)
+    stats = sched.stats
+    p50, p99 = latency_percentiles(completions)
+    print(f"arch={cfg.name} sparse={args.sparsity} continuous "
+          f"slots={args.slots} requests={len(completions)}")
+    print(f"decode {stats['decode_tok_s']:.1f} tok/s "
+          f"({stats['generated_tokens']} tokens, "
+          f"{stats['decode_steps']} steps); "
+          f"latency p50 {p50*1e3:.1f} ms p99 {p99*1e3:.1f} ms")
+    for c in completions[:2]:
+        print(f"  uid={c.uid}: {c.tokens[:16].tolist()}")
 
 
 def main():
@@ -25,24 +87,21 @@ def main():
     ap.add_argument("--sparsity", type=float, default=0.5)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--continuous", action="store_true",
+                    help="slot-based continuous batching over a synthetic "
+                         "mixed-length request trace")
+    ap.add_argument("--requests", type=int, default=12,
+                    help="trace size for --continuous")
+    ap.add_argument("--slots", type=int, default=4,
+                    help="KV slot count (decode batch width) for --continuous")
+    ap.add_argument("--prefill-chunk", type=int, default=16)
+    ap.add_argument("--trace", action="store_true",
+                    help="print per-request admit/retire events")
     args = ap.parse_args()
-
-    scfg = SparsityConfig(sparsity=args.sparsity, m=None, tile=None,
-                          format="compressed_xla" if args.sparsity > 0 else "dense",
-                          min_dim=64 if args.smoke else 512)
-    cfg = (smoke_config(args.arch) if args.smoke else get_config(args.arch)).with_(
-        sparsity=scfg)
-    params, _ = reg.init_params(cfg, jax.random.PRNGKey(0))
-    eng = Engine(cfg, params, ServeConfig(max_new_tokens=args.new_tokens,
-                                          temperature=args.temperature))
-    prompts = np.random.default_rng(0).integers(
-        0, cfg.vocab_size, (args.batch, args.prompt_len)).astype(np.int32)
-    eng.generate(prompts)  # compile
-    res = eng.generate(prompts)
-    print(f"arch={cfg.name} sparse={args.sparsity} batch={args.batch}")
-    print(f"prefill {res['prefill_s']*1e3:.1f} ms; decode {res['decode_tok_s']:.1f} tok/s")
-    for i, row in enumerate(res["tokens"][:2]):
-        print(f"  seq{i}: {row[:16].tolist()}")
+    if args.continuous:
+        run_continuous(args)
+    else:
+        run_static(args)
 
 
 if __name__ == "__main__":

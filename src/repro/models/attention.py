@@ -246,6 +246,57 @@ def cache_spec_names():
     return (None, "act_batch", "act_kv_seq", "act_kv_heads", None)
 
 
+def _cached_attention(q, k_new, v_new, kc, vc, *, limit, causal: bool):
+    """softmax over (cache rows < limit[b]) ++ this step's new keys.
+
+    q [B,C,H,D]; k_new/v_new [B,C,KV,D]; kc/vc [B,S_max,KV,D]; limit [B]
+    int32.  ``causal`` masks the new keys intra-chunk (j <= i); cache rows
+    >= limit may hold stale junk (a freed slot's previous occupant) and are
+    always masked.  Shared by one-token decode (C=1, causal irrelevant) and
+    chunked prefill.  Returns o [B,C,H,D].
+    """
+    b, c_len, h, d = q.shape
+    kvh = kc.shape[2]
+    s_max = kc.shape[1]
+    scale = 1.0 / math.sqrt(d)
+    f32 = jnp.float32
+    qi = jnp.arange(c_len, dtype=jnp.int32)
+
+    if h % kvh == 0:
+        g = h // kvh
+        qg = q.reshape(b, c_len, kvh, g, d)
+        s_c = jnp.einsum("bqkgd,bskd->bkgqs", qg, kc.astype(q.dtype)).astype(f32) * scale
+        ki = jnp.arange(s_max).reshape(1, 1, 1, 1, -1)
+        s_c = jnp.where(ki < limit.reshape(b, 1, 1, 1, 1), s_c, -1e30)
+        s_n = jnp.einsum("bqkgd,bskd->bkgqs", qg, k_new.astype(q.dtype)).astype(f32) * scale
+        if causal and c_len > 1:
+            mask = (qi[None, :] <= qi[:, None]).reshape(1, 1, 1, c_len, c_len)
+            s_n = jnp.where(mask, s_n, -1e30)
+        w = jax.nn.softmax(jnp.concatenate([s_c, s_n], axis=-1), axis=-1)
+        w = w.astype(q.dtype)
+        o = jnp.einsum("bkgqs,bskd->bqkgd", w[..., :s_max], vc.astype(q.dtype))
+        o = o + jnp.einsum("bkgqs,bskd->bqkgd", w[..., s_max:],
+                           v_new.astype(q.dtype))
+        return o.reshape(b, c_len, h, d)
+
+    kx = _expand_kv(kc, h).astype(q.dtype)
+    vx = _expand_kv(vc, h).astype(q.dtype)
+    s_c = jnp.einsum("bqhd,bshd->bhqs", q, kx).astype(f32) * scale
+    ki = jnp.arange(s_max).reshape(1, 1, 1, -1)
+    s_c = jnp.where(ki < limit.reshape(b, 1, 1, 1), s_c, -1e30)
+    kn = _expand_kv(k_new, h).astype(q.dtype)
+    vn = _expand_kv(v_new, h).astype(q.dtype)
+    s_n = jnp.einsum("bqhd,bshd->bhqs", q, kn).astype(f32) * scale
+    if causal and c_len > 1:
+        mask = (qi[None, :] <= qi[:, None]).reshape(1, 1, c_len, c_len)
+        s_n = jnp.where(mask, s_n, -1e30)
+    w = jax.nn.softmax(jnp.concatenate([s_c, s_n], axis=-1), axis=-1)
+    w = w.astype(q.dtype)
+    o = jnp.einsum("bhqs,bshd->bqhd", w[..., :s_max], vx)
+    o = o + jnp.einsum("bhqs,bshd->bqhd", w[..., s_max:], vn)
+    return o
+
+
 def attn_decode(
     params,
     cfg: ModelConfig,
@@ -257,60 +308,78 @@ def attn_decode(
 ):
     """One-token decode against a READ-ONLY cache slice.
 
-    x [B, 1, d]; layer_cache (k, v): [B, S_max, KV, D]; pos: scalar int32.
-    Returns (out, (k_new [B,1,KV,D], v_new)) — the caller writes the new
-    token into the stacked cache with ONE batched dynamic-update-slice after
-    the layer scan.  Updating inside the scan made XLA stack a full cache
-    copy per layer as scan outputs (2 x 7 TB/chip/token measured on
+    x [B, 1, d]; layer_cache (k, v): [B, S_max, KV, D]; pos: scalar int32 OR
+    per-sequence [B] int32 (continuous batching: every slot sits at its own
+    length).  Returns (out, (k_new [B,1,KV,D], v_new)) — the caller writes the
+    new token into the stacked cache with ONE batched dynamic-update-slice
+    after the layer scan.  Updating inside the scan made XLA stack a full
+    cache copy per layer as scan outputs (2 x 7 TB/chip/token measured on
     qwen2-vl-72b decode_32k; EXPERIMENTS §Perf iteration J).
 
     Attention = online-softmax combine of (cache positions < pos) with the
     new token at pos — identical math to write-then-attend(pos+1).
     """
     b = x.shape[0]
-    positions = jnp.broadcast_to(pos.reshape(1, 1), (b, 1))
+    pos_b = jnp.broadcast_to(jnp.reshape(jnp.asarray(pos, jnp.int32), (-1,)), (b,))
+    q, k_new, v_new = _qkv(params, cfg, x, pos_b[:, None], mrope_positions)
+    kc, vc = layer_cache
+    o = _cached_attention(q, k_new, v_new, kc, vc, limit=pos_b, causal=False)
+    o = o.reshape(b, 1, -1)
+    return linear_apply(params["o"], o), (k_new, v_new)
+
+
+def attn_prefill_chunk(
+    params,
+    cfg: ModelConfig,
+    x: jax.Array,
+    layer_cache: Tuple[jax.Array, jax.Array],
+    *,
+    start: jax.Array,
+    mrope_positions: Optional[jax.Array] = None,
+):
+    """Chunked prefill through one layer against a preallocated cache.
+
+    x [B, C, d] holds tokens at absolute positions [start, start+C);
+    layer_cache (k, v): [B, S_max, KV, D] holds this sequence's earlier
+    chunks in rows < start.  Attention = softmax over (cache rows < start)
+    ++ (causal intra-chunk).  Returns (out, (k_chunk [B,C,KV,D], v_chunk));
+    as with decode, the caller commits the chunk's K/V with ONE stacked
+    :func:`cache_write` after the layer scan.
+    """
+    b, c_len = x.shape[:2]
+    qi = jnp.arange(c_len, dtype=jnp.int32)
+    positions = jnp.broadcast_to(start + qi[None, :], (b, c_len))
     q, k_new, v_new = _qkv(params, cfg, x, positions, mrope_positions)
     kc, vc = layer_cache
-    h = q.shape[2]
-    kvh = kc.shape[2]
-    d = q.shape[3]
-    scale = 1.0 / math.sqrt(d)
-    f32 = jnp.float32
-
-    if h % kvh == 0:
-        g = h // kvh
-        qg = q.reshape(b, 1, kvh, g, d)
-        s_c = jnp.einsum("bqkgd,bskd->bkgqs", qg, kc.astype(q.dtype)).astype(f32) * scale
-        ki = jnp.arange(kc.shape[1]).reshape(1, 1, 1, 1, -1)
-        s_c = jnp.where(ki < pos, s_c, -1e30)  # only written history
-        s_n = jnp.einsum("bqkgd,bskd->bkgqs", qg, k_new.astype(q.dtype)).astype(f32) * scale
-        s = jnp.concatenate([s_c, s_n], axis=-1)
-        w = jax.nn.softmax(s, axis=-1).astype(q.dtype)
-        o = jnp.einsum("bkgqs,bskd->bqkgd", w[..., :-1], vc.astype(q.dtype))
-        o = o + w[..., -1:].transpose(0, 3, 1, 2, 4) * v_new[:, :, :, None, :]
-        o = o.reshape(b, 1, h, d)
-    else:
-        kx = _expand_kv(kc, h).astype(q.dtype)
-        vx = _expand_kv(vc, h).astype(q.dtype)
-        s_c = jnp.einsum("bqhd,bshd->bhqs", q, kx).astype(f32) * scale
-        ki = jnp.arange(kc.shape[1]).reshape(1, 1, 1, -1)
-        s_c = jnp.where(ki < pos, s_c, -1e30)
-        kn = _expand_kv(k_new, h).astype(q.dtype)
-        vn = _expand_kv(v_new, h).astype(q.dtype)
-        s_n = jnp.einsum("bqhd,bshd->bhqs", q, kn).astype(f32) * scale
-        s = jnp.concatenate([s_c, s_n], axis=-1)
-        w = jax.nn.softmax(s, axis=-1).astype(q.dtype)
-        o = jnp.einsum("bhqs,bshd->bqhd", w[..., :-1], vx)
-        o = o + jnp.einsum("bhqs,bshd->bqhd", w[..., -1:], vn)
-    o = o.reshape(b, 1, -1)
+    start_b = jnp.broadcast_to(jnp.reshape(jnp.asarray(start, jnp.int32), (-1,)), (b,))
+    o = _cached_attention(q, k_new, v_new, kc, vc, limit=start_b, causal=True)
+    o = o.reshape(b, c_len, -1)
     return linear_apply(params["o"], o), (k_new, v_new)
 
 
 def cache_write(cache_k, cache_v, k_news, v_news, pos):
     """One batched in-place write of the step's new K/V into the stacked
-    cache. cache_*: [L, B, S, KV, D]; *_news: [L, B, 1, KV, D]."""
+    cache. cache_*: [L, B, S, KV, D]; *_news: [L, B, C, KV, D] (C = 1 for
+    decode, C = chunk length for chunked prefill).
+
+    ``pos`` is the scalar row where the write starts, or a per-sequence [B]
+    vector (continuous batching: every slot writes at its own length; C must
+    be 1).  Starts are clamped by dynamic_update_slice semantics, so an idle
+    slot parked at its last row can never write out of bounds.
+    """
+    pos = jnp.asarray(pos, jnp.int32)
     zero = jnp.zeros((), jnp.int32)
-    idx = (zero, zero, pos, zero, zero)
-    k2 = jax.lax.dynamic_update_slice(cache_k, k_news.astype(cache_k.dtype), idx)
-    v2 = jax.lax.dynamic_update_slice(cache_v, v_news.astype(cache_v.dtype), idx)
+    if pos.ndim == 0:
+        idx = (zero, zero, pos, zero, zero)
+        k2 = jax.lax.dynamic_update_slice(cache_k, k_news.astype(cache_k.dtype), idx)
+        v2 = jax.lax.dynamic_update_slice(cache_v, v_news.astype(cache_v.dtype), idx)
+        return k2, v2
+
+    def write1(cache, news, p):  # [L, S, KV, D], [L, C, KV, D], scalar
+        return jax.lax.dynamic_update_slice(cache, news, (zero, p, zero, zero))
+
+    k2 = jax.vmap(write1, in_axes=(1, 1, 0), out_axes=1)(
+        cache_k, k_news.astype(cache_k.dtype), pos)
+    v2 = jax.vmap(write1, in_axes=(1, 1, 0), out_axes=1)(
+        cache_v, v_news.astype(cache_v.dtype), pos)
     return k2, v2

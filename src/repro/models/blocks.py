@@ -108,6 +108,30 @@ def block_decode(params, cfg: ModelConfig, h, layer_cache, *, pos,
     return h + y, new_cache
 
 
+def block_prefill_chunk(params, cfg: ModelConfig, h, layer_cache, *, start,
+                        mrope_positions=None):
+    """Chunked prefill through a transformer block: h [B, C, d] at absolute
+    positions [start, start+C) against a preallocated layer cache.
+    Returns (h, (k_chunk, v_chunk))."""
+    x = norm_apply(params["ln1"], h, cfg.norm)
+    a, kv_new = attn.attn_prefill_chunk(
+        params["attn"], cfg, x, layer_cache, start=start,
+        mrope_positions=mrope_positions,
+    )
+    h = h + a
+    x = norm_apply(params["ln2"], h, cfg.norm)
+    if cfg.is_moe:
+        if cfg.moe_impl == "shard_map":
+            from repro.models.moe import moe_apply_shard_map
+
+            y, _ = moe_apply_shard_map(params["moe"], cfg, x)
+        else:
+            y, _ = moe_apply(params["moe"], cfg, x)
+    else:
+        y = mlp_apply(params["mlp"], cfg, x)
+    return h + y, kv_new
+
+
 # ---------------------------------------------------------------------------
 # Zamba2 shared attention block (one set of weights reused across the stack)
 # ---------------------------------------------------------------------------

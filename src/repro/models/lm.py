@@ -28,6 +28,7 @@ from repro.models.blocks import (
     block_apply,
     block_decode,
     block_init,
+    block_prefill_chunk,
     shared_block_apply,
     shared_block_decode,
     shared_block_init,
@@ -255,7 +256,9 @@ def cache_init(cfg: ModelConfig, batch: int, max_len: int):
 
 
 def decode_step(params, cfg: ModelConfig, cache, tokens: jax.Array, pos: jax.Array):
-    """One decode step. tokens [B,1]; pos scalar int32 (current length).
+    """One decode step. tokens [B,1]; pos scalar int32 (current length) or a
+    per-sequence [B] int32 vector (continuous batching: slots at mixed
+    lengths decode in one step).
 
     Returns (logits [B,1,V], new_cache).
     """
@@ -264,7 +267,8 @@ def decode_step(params, cfg: ModelConfig, cache, tokens: jax.Array, pos: jax.Arr
     pat = cfg.block_pattern
     mrope_positions = None
     if cfg.mrope:
-        mrope_positions = jnp.broadcast_to(pos.reshape(1, 1, 1), (b, 3, 1))
+        pos_b = jnp.broadcast_to(jnp.reshape(jnp.asarray(pos, jnp.int32), (-1,)), (b,))
+        mrope_positions = jnp.broadcast_to(pos_b.reshape(b, 1, 1), (b, 3, 1))
 
     if pat == "attn":
         def body(carry, xs):
@@ -401,3 +405,51 @@ def prefill(params, cfg: ModelConfig, tokens: jax.Array):
     h = norm_apply(params["final_norm"], h, cfg.norm)
     logits = _unembed(params, cfg, h)
     return logits[:, -1:], cache
+
+
+def prefill_chunk(params, cfg: ModelConfig, cache, tokens: jax.Array,
+                  start: jax.Array, with_logits: bool = True):
+    """Prefill one chunk of a prompt into a preallocated cache.
+
+    tokens [B, C] sit at absolute positions [start, start+C); ``cache`` is a
+    full-size decode cache ([L, B, S_max, KV, D] per leaf) whose rows < start
+    already hold this sequence's earlier chunks.  Returns
+    (logits [B, C, V], cache with rows start..start+C written);
+    ``with_logits=False`` skips the final-norm + unembed (the vocab-sized
+    matmul) and returns (None, cache) — only the chunk containing the last
+    prompt token needs logits.
+
+    This is the unit of work the continuous-batching scheduler interleaves
+    with decode steps: a long prompt is admitted as ceil(S/C) fixed-shape
+    chunk calls (one compiled executable) instead of one [B, S]-shaped
+    prefill per distinct prompt length.  Attention-cache families only —
+    recurrent/hybrid state caches have no random-access rows to chunk into.
+    """
+    if cfg.block_pattern != "attn":
+        raise NotImplementedError(
+            f"prefill_chunk supports attention families only, not "
+            f"block_pattern={cfg.block_pattern!r}")
+    b, c_len = tokens.shape
+    batch = {"tokens": tokens}
+    mrope_positions = None
+    if cfg.mrope:
+        pos1 = start + jnp.arange(c_len, dtype=jnp.int32)
+        mrope_positions = jnp.broadcast_to(pos1[None, None, :], (b, 3, c_len))
+    h = _embed_tokens(params, cfg, batch)
+
+    def body(carry, xs):
+        hh, = carry
+        lp, kc, vc = xs
+        hh, (kn, vn) = block_prefill_chunk(
+            lp, cfg, hh, (kc, vc), start=start,
+            mrope_positions=mrope_positions)
+        return (hh,), (kn, vn)
+
+    (h,), (k_news, v_news) = jax.lax.scan(
+        body, (h,), (params["layers"], cache["k"], cache["v"]))
+    k2, v2 = attn_mod.cache_write(cache["k"], cache["v"], k_news, v_news, start)
+    if not with_logits:
+        return None, {"k": k2, "v": v2}
+    h = norm_apply(params["final_norm"], h, cfg.norm)
+    logits = _unembed(params, cfg, h)
+    return logits, {"k": k2, "v": v2}

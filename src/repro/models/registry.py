@@ -90,6 +90,20 @@ def decode_fn(cfg: ModelConfig):
     )
 
 
+def prefill_chunk_fn(cfg: ModelConfig):
+    """Chunked prefill step (continuous batching): processes tokens [B, C] at
+    absolute positions [start, start+C) into a preallocated cache.
+    Attention-pattern decoder-only families only."""
+    if cfg.is_encoder_decoder or cfg.block_pattern != "attn":
+        raise NotImplementedError(
+            f"chunked prefill requires a decoder-only attention family; "
+            f"{cfg.name} has block_pattern={cfg.block_pattern!r}"
+            + (" (encoder-decoder)" if cfg.is_encoder_decoder else ""))
+    return lambda params, cache, tokens, start, with_logits=True: (
+        lm_mod.prefill_chunk(params, cfg, cache, tokens, start, with_logits)
+    )
+
+
 def cache_init_fn(cfg: ModelConfig, batch: int, max_len: int):
     if cfg.is_encoder_decoder:
         return lambda: encdec_mod.encdec_cache_init(cfg, batch, max_len, cfg.encoder_seq)

@@ -1,1 +1,10 @@
 from repro.serve.engine import Engine, ServeConfig  # noqa: F401
+from repro.serve.kv_slots import Slot, SlotError, SlotPool  # noqa: F401
+from repro.serve.scheduler import (  # noqa: F401
+    Completion,
+    Request,
+    RequestQueue,
+    Scheduler,
+    latency_percentiles,
+    synthetic_trace,
+)

@@ -1,0 +1,336 @@
+"""Continuous-batching serve scheduler (TensorRT-LLM-style in-flight batching).
+
+The static :meth:`Engine.generate` pads every request in a batch to the
+slowest sequence: one long prompt stalls the whole batch, and finished
+sequences keep burning decode FLOPs until the last one ends.  The
+:class:`Scheduler` instead admits variable-length requests into a fixed pool
+of KV-cache slots (:mod:`repro.serve.kv_slots`) and runs one *pool-shaped*
+decode step per iteration:
+
+  admit   : while a slot is free and requests wait, bind the next request to
+            a slot and run its prompt through fixed-shape chunked prefill
+            (``Engine.prefill_chunk_step``) — ceil(S/C) calls of one compiled
+            [1, C] executable, never a per-prompt-length recompile;
+  decode  : ONE batched decode step over all n_slots rows with per-slot
+            positions (``decode_step`` accepts a [B] position vector);
+  retire  : sequences hitting EOS / their token budget complete immediately
+            and free their slot for the next admission — completions stream
+            out as they happen (:meth:`Scheduler.run_iter`).
+
+Prefill and decode steps are traced under different dispatch phases, so the
+sparse operators inside run the per-phase implementations the engine pinned
+at build time.  Attention-cache families only (recurrent state caches have no
+random-access rows to slot into); everything else should keep using the
+static engine — same Engine object, same weights, same step primitives.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+from typing import Callable, Dict, Iterable, Iterator, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import registry as reg
+from repro.serve.engine import Engine
+from repro.serve.kv_slots import SlotPool
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request: a prompt and a token budget."""
+
+    uid: int
+    prompt: np.ndarray  # [S] int32
+    max_new_tokens: int = 32
+
+    def __post_init__(self):
+        self.prompt = np.asarray(self.prompt, np.int32).reshape(-1)
+        if self.prompt.size == 0:
+            raise ValueError(f"request {self.uid}: empty prompt")
+        if self.max_new_tokens < 1:
+            raise ValueError(f"request {self.uid}: max_new_tokens < 1")
+
+
+@dataclasses.dataclass
+class Completion:
+    """A finished request: generated tokens + latency breakdown."""
+
+    uid: int
+    prompt_len: int
+    tokens: np.ndarray  # [n_generated] int32, EOS included when emitted
+    t_submit: float
+    t_first: float  # first token sampled (end of this request's prefill)
+    t_done: float
+
+    @property
+    def n_generated(self) -> int:
+        return int(self.tokens.shape[0])
+
+    @property
+    def ttft_s(self) -> float:
+        return self.t_first - self.t_submit
+
+    @property
+    def latency_s(self) -> float:
+        return self.t_done - self.t_submit
+
+
+class RequestQueue:
+    """FIFO admission queue."""
+
+    def __init__(self, requests: Iterable[Request] = ()):
+        self._q = collections.deque(requests)
+
+    def push(self, req: Request) -> None:
+        self._q.append(req)
+
+    def pop(self) -> Request:
+        return self._q.popleft()
+
+    def __len__(self) -> int:
+        return len(self._q)
+
+    def __bool__(self) -> bool:
+        return bool(self._q)
+
+
+@dataclasses.dataclass
+class _InFlight:
+    """Scheduler-side state of an admitted request."""
+
+    req: Request
+    t_first: float
+    tokens: List[int]
+
+
+class Scheduler:
+    """Slot-based continuous batching on top of an :class:`Engine`.
+
+    n_slots        : decode batch width == KV slot count (one compiled decode
+                     executable for the whole run)
+    max_len        : per-slot KV rows; defaults to the trace's
+                     max(prompt_len + max_new_tokens)
+    prefill_chunk  : chunked-prefill width C (admission latency knob: smaller
+                     chunks interleave admissions and decode more finely)
+    """
+
+    def __init__(self, engine: Engine, *, n_slots: int = 4,
+                 max_len: Optional[int] = None, prefill_chunk: int = 16):
+        cfg = engine.cfg
+        if cfg.is_encoder_decoder or cfg.block_pattern != "attn":
+            raise ValueError(
+                f"continuous batching requires a decoder-only attention "
+                f"family (slot-addressable KV rows); {cfg.name} has "
+                f"block_pattern={cfg.block_pattern!r}. Use Engine.generate.")
+        if prefill_chunk < 1:
+            raise ValueError(f"prefill_chunk must be >= 1, got {prefill_chunk}")
+        self.engine = engine
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.prefill_chunk = prefill_chunk
+        self.stats: Dict[str, float] = {}
+        # Re-plan dispatch for the geometry this scheduler actually traces:
+        # chunked prefill runs [1, C]-row operands (C capped by max_len, the
+        # same cap run_iter applies) and pool decode [n_slots] rows — the
+        # engine's build-time hints describe the *static* path's shapes, so
+        # without this the scheduler's phase-tagged lookups would miss the
+        # plan and fall back to the heuristic.
+        from repro import dispatch as _dispatch
+
+        c_w = min(prefill_chunk, max_len) if max_len is not None else prefill_chunk
+        self.dispatch_plan = _dispatch.plan_params(
+            engine.params,
+            phase_hints={"prefill": c_w, "decode": n_slots},
+            profile=engine.scfg.profile_dispatch)
+        engine.dispatch_plan.update(self.dispatch_plan)
+        # pool-cache write-back for admissions: donate the pool so XLA can
+        # update the slot's rows in place instead of copying the whole
+        # [L, n_slots, max_len, KV, D] cache per admitted request
+        def _writeback(full, part, slot):
+            def one(f, p):
+                idx = (jnp.zeros((), jnp.int32), slot) + \
+                    (jnp.zeros((), jnp.int32),) * (f.ndim - 2)
+                return jax.lax.dynamic_update_slice(f, p.astype(f.dtype), idx)
+
+            return jax.tree_util.tree_map(one, full, part)
+
+        self._writeback = jax.jit(_writeback, donate_argnums=(0,))
+
+    # ------------------------------------------------------------------
+
+    def run(self, requests: Iterable[Request],
+            log_fn: Optional[Callable[[str], None]] = None) -> List[Completion]:
+        """Serve every request; returns completions in finish order (see
+        :meth:`run_iter` for the streaming form). Latency/throughput counters
+        land in ``self.stats``."""
+        return list(self.run_iter(requests, log_fn=log_fn))
+
+    def run_iter(self, requests: Iterable[Request],
+                 log_fn: Optional[Callable[[str], None]] = None
+                 ) -> Iterator[Completion]:
+        """Generator form of :meth:`run`: yields each Completion the moment
+        its sequence retires, while later requests are still decoding."""
+        reqs = list(requests)
+        log = log_fn or (lambda _msg: None)
+        if not reqs:
+            self.stats = {"decode_steps": 0, "decode_s": 0.0, "total_s": 0.0,
+                          "generated_tokens": 0, "requests": 0,
+                          "decode_tok_s": 0.0}
+            return
+        engine, cfg = self.engine, self.engine.cfg
+        needed = max(len(r.prompt) + r.max_new_tokens for r in reqs)
+        if self.max_len is None:
+            # the padded final prefill chunk writes rows up to
+            # round_up(prompt, C); size the cache so that write always fits
+            # (dynamic_update_slice clamps a too-high start *backwards*,
+            # which would silently corrupt earlier rows)
+            c_w = self.prefill_chunk
+            pad_end = max(-(-len(r.prompt) // c_w) * c_w for r in reqs)
+            max_len = max(needed, pad_end)
+        else:
+            max_len = self.max_len
+            c_w = min(self.prefill_chunk, max_len)
+            if needed > max_len:
+                raise ValueError(
+                    f"max_len={max_len} cannot hold the longest request "
+                    f"(prompt+budget={needed})")
+            pad_end = max(-(-len(r.prompt) // c_w) * c_w for r in reqs)
+            if pad_end > max_len:
+                raise ValueError(
+                    f"prefill_chunk={c_w} pads the longest prompt to "
+                    f"{pad_end} rows > max_len={max_len}; lower "
+                    f"prefill_chunk or raise max_len")
+        n = self.n_slots
+        queue = RequestQueue(reqs)
+        pool = SlotPool(n, max_len)
+        cache = reg.cache_init_fn(cfg, n, max_len)()
+        tok_buf = np.zeros((n,), np.int32)
+        inflight: Dict[int, _InFlight] = {}
+        key = jax.random.PRNGKey(engine.scfg.seed)
+        eos = engine.scfg.eos_id
+        t0 = time.perf_counter()
+        decode_steps = 0
+        decode_s = 0.0
+        n_generated = 0
+
+        def retire(idx: int) -> Completion:
+            st = inflight.pop(idx)
+            pool.free(idx)
+            comp = Completion(
+                uid=st.req.uid, prompt_len=len(st.req.prompt),
+                tokens=np.asarray(st.tokens, np.int32), t_submit=t0,
+                t_first=st.t_first, t_done=time.perf_counter())
+            log(f"[retire] uid={comp.uid} slot={idx} "
+                f"generated={comp.n_generated} latency={comp.latency_s:.3f}s")
+            return comp
+
+        while queue or pool.n_active:
+            # -- admission: chunked prefill into every free slot ----------
+            while queue and pool.n_free:
+                req = queue.pop()
+                slot = pool.alloc(req.uid)
+                logits, cache = self._prefill_into(cache, slot.index,
+                                                   req.prompt, c_w)
+                slot.pos = len(req.prompt)
+                key, k = jax.random.split(key)
+                tok = int(np.asarray(engine.sample(logits, k))[0])
+                n_generated += 1
+                inflight[slot.index] = _InFlight(
+                    req=req, t_first=time.perf_counter(), tokens=[tok])
+                log(f"[admit] uid={req.uid} slot={slot.index} "
+                    f"prompt={len(req.prompt)} budget={req.max_new_tokens}")
+                if (eos is not None and tok == eos) or req.max_new_tokens == 1:
+                    yield retire(slot.index)
+                else:
+                    tok_buf[slot.index] = tok
+            if not pool.n_active:
+                continue  # every admission retired instantly; admit more
+
+            # -- one pool-shaped decode step ------------------------------
+            pos_vec = pool.positions()
+            t1 = time.perf_counter()
+            logits, cache = engine.decode_step(
+                cache, jnp.asarray(tok_buf[:, None]), jnp.asarray(pos_vec))
+            key, k = jax.random.split(key)
+            toks = np.asarray(engine.sample(logits, k))
+            decode_s += time.perf_counter() - t1
+            decode_steps += 1
+
+            # -- retire finished sequences, advance the rest --------------
+            for idx in sorted(inflight):
+                st = inflight[idx]
+                pool.advance(idx)  # the step wrote st's fed token at pos
+                tok = int(toks[idx])
+                st.tokens.append(tok)
+                n_generated += 1
+                if ((eos is not None and tok == eos)
+                        or len(st.tokens) >= st.req.max_new_tokens):
+                    yield retire(idx)
+                else:
+                    tok_buf[idx] = tok
+
+        total_s = time.perf_counter() - t0
+        self.stats = {
+            "decode_steps": decode_steps,
+            "decode_s": decode_s,
+            "total_s": total_s,
+            "generated_tokens": n_generated,
+            "requests": len(reqs),
+            "decode_tok_s": n_generated / max(decode_s, 1e-9),
+        }
+
+    # ------------------------------------------------------------------
+
+    def _prefill_into(self, cache, slot: int, prompt: np.ndarray, c_w: int):
+        """Chunked prefill of one prompt into one slot's cache rows.
+
+        Slices the slot's [L, 1, S_max, KV, D] view out of the pool cache,
+        streams fixed-shape [1, C] chunks through ``prefill_chunk_step``
+        (the final chunk is right-padded; pad rows land beyond the prompt
+        and are overwritten by decode before they are ever attended), then
+        writes the view back.  Returns (last-real-token logits, cache).
+        """
+        s_len = int(len(prompt))
+        sub = jax.tree_util.tree_map(lambda a: a[:, slot:slot + 1], cache)
+        logits = None
+        for start in range(0, s_len, c_w):
+            chunk = np.asarray(prompt[start:start + c_w], np.int32)[None, :]
+            if chunk.shape[1] < c_w:
+                chunk = np.pad(chunk, ((0, 0), (0, c_w - chunk.shape[1])))
+            logits, sub = self.engine.prefill_chunk_step(
+                sub, chunk, start, with_logits=start + c_w >= s_len)
+        last = (s_len - 1) % c_w
+        # sub is the last chunk call's jit output (fresh buffers), so
+        # donating the pool here can never delete a buffer sub still uses
+        cache = self._writeback(cache, sub, jnp.asarray(slot, jnp.int32))
+        return logits[:, last:last + 1], cache
+
+
+def latency_percentiles(completions) -> tuple:
+    """(p50_s, p99_s) of request latency over a completion list
+    (nearest-rank; (0.0, 0.0) when empty)."""
+    lat = sorted(c.latency_s for c in completions)
+    if not lat:
+        return 0.0, 0.0
+    p50 = lat[len(lat) // 2]
+    p99 = lat[min(len(lat) - 1, int(len(lat) * 0.99))]
+    return p50, p99
+
+
+def synthetic_trace(n_requests: int, *, seed: int = 0, vocab: int = 128,
+                    prompt_lens=(4, 48), new_tokens=(4, 32)) -> List[Request]:
+    """Mixed-length request trace for benchmarks/smoke tests: prompt lengths
+    and token budgets drawn uniformly from the given inclusive ranges."""
+    rng = np.random.default_rng(seed)
+    out = []
+    for uid in range(n_requests):
+        s = int(rng.integers(prompt_lens[0], prompt_lens[1] + 1))
+        g = int(rng.integers(new_tokens[0], new_tokens[1] + 1))
+        out.append(Request(uid=uid,
+                           prompt=rng.integers(0, vocab, (s,)).astype(np.int32),
+                           max_new_tokens=g))
+    return out
