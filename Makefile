@@ -1,7 +1,7 @@
 PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 export PYTHONPATH
 
-.PHONY: test bench bench-quick serve-smoke ci
+.PHONY: test bench bench-quick bench-conv serve-smoke ci
 
 test:            ## tier-1 test suite
 	python -m pytest -x -q
@@ -12,8 +12,11 @@ bench:           ## full benchmark harness (all paper figures)
 bench-quick:     ## smoke subset: conv layers + dispatch, 3 iters
 	python -m benchmarks.run --quick
 
+bench-conv:      ## conv megakernel race, quick; writes BENCH_conv.json
+	python -m benchmarks.bench_conv_fused --quick --json
+
 serve-smoke:     ## continuous-batching scheduler CLI smoke
 	python -m repro.launch.serve --arch smollm-360m --smoke --continuous \
 	    --requests 6 --slots 3 --prompt-len 12 --new-tokens 8 --prefill-chunk 8
 
-ci: test serve-smoke bench-quick  ## what scripts/ci.sh runs
+ci: test serve-smoke bench-quick bench-conv  ## what scripts/ci.sh runs

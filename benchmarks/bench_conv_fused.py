@@ -1,0 +1,159 @@
+"""Fused conv megakernel vs its decomposed plans (perf trajectory artifact).
+
+Races, per ResNet-shaped conv layer at 50% column-wise sparsity:
+
+  fused       — the im2col+pack+sparse-GEMM megakernel (strips live in VMEM,
+                zero intermediate HBM round-trips)
+  two_kernel  — pack kernel + strip-major sparse GEMM (strips written/read
+                once, no transpose relayout)
+  transposed  — the pre-megakernel two-kernel path: pack kernel, then
+                ``transpose(0,2,1).reshape`` relayout feeding the row-major
+                GEMM (three patch-matrix HBM round-trips)
+  xla         — pack kernel + gather-einsum reference GEMM
+
+Also reports the analytic bytes moved around the packing stage
+(``im2col_pack.ops.bytes_moved_*``) so the measured ordering can be checked
+against the data-movement model.  ``--json`` writes ``BENCH_conv.json`` —
+the repo's conv perf-trajectory artifact — with every timing and the
+fused/two-kernel speedup per layer.  ``--quick`` runs the two deepest layers
+with 3 iters (CI smoke; interpret-mode Pallas on CPU is the slow part).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.timing import row, time_fn
+from repro.core import SparsityConfig
+from repro.kernels.conv_gemm.ops import (
+    compress_conv_weights,
+    conv2d_fused,
+    conv2d_two_kernel,
+    conv2d_xla_ref,
+)
+from repro.kernels.colwise_nm.ops import colwise_nm_matmul
+from repro.kernels.im2col_pack.ops import (
+    bytes_moved_fused,
+    bytes_moved_unfused,
+    im2col_pack,
+)
+from repro.kernels.im2col_pack.ref import out_size
+
+SPARSITY = 0.5
+V = 128
+
+# ResNet-50 stages (batch 1); H capped so CPU interpret-mode Pallas stays
+# affordable — the deeper layers are the exact paper shapes.
+LAYERS = [
+    ("s2.c2", 128, 28, 128, 3, 1),
+    ("s3.c2", 256, 14, 256, 3, 1),
+    ("s4.c2", 512, 7, 512, 3, 1),
+]
+QUICK_LAYERS = ("s3.c2", "s4.c2")
+
+
+def _transposed(x, values, idx, *, kh, kw, stride, pad, v):
+    """The pre-megakernel plan: pack, relayout through HBM, row-major GEMM."""
+    c, b, h, w = x.shape
+    ho = out_size(h, kh, stride, pad)
+    wo = out_size(w, kw, stride, pad)
+    o = values.shape[0] * values.shape[2]
+    strips = im2col_pack(x, kh=kh, kw=kw, stride=stride, pad=pad, v=v)
+    xt = strips.transpose(0, 2, 1).reshape(-1, kh * kw * c)
+    y = colwise_nm_matmul(xt, values, idx)[: b * ho * wo]
+    return y.T.reshape(o, b, ho, wo)
+
+
+PLANS = [
+    ("fused", conv2d_fused),
+    ("two_kernel", conv2d_two_kernel),
+    ("transposed", _transposed),
+    ("xla", conv2d_xla_ref),
+]
+
+
+def _problem(c, h, o, k, stride):
+    x = jax.random.normal(jax.random.PRNGKey(0), (c, 1, h, h))
+    wt = jax.random.normal(jax.random.PRNGKey(1), (o, k, k, c)) / jnp.sqrt(
+        float(k * k * c))
+    cfg = SparsityConfig(SPARSITY, m=None, tile=None, format="compressed_pallas")
+    values, idx, meta = compress_conv_weights(wt, cfg)
+    return x, values, idx, meta
+
+
+def measure(iters: int = 5, quick: bool = False):
+    """Time every plan per layer; returns {layer: {plan: us, ...}}."""
+    layers = [l for l in LAYERS if not quick or l[0] in QUICK_LAYERS]
+    results = {}
+    for name, c, h, o, k, stride in layers:
+        pad = k // 2 if k > 1 else 0
+        x, values, idx, meta = _problem(c, h, o, k, stride)
+        ho = out_size(h, k, stride, pad)
+        entry = {"shape": {"c": c, "h": h, "o": o, "k": k, "stride": stride,
+                           "tile": meta.tile, "k_kept": meta.k_kept}}
+        for plan, fn in PLANS:
+            f = jax.jit(lambda x, fn=fn: fn(
+                x, values, idx, kh=k, kw=k, stride=stride, pad=pad, v=V))
+            entry[plan] = time_fn(f, x, iters=iters, warmup=1)
+        entry["fused_speedup_vs_two_kernel"] = entry["two_kernel"] / entry["fused"]
+        entry["fused_speedup_vs_transposed"] = entry["transposed"] / entry["fused"]
+        entry["bytes_moved_fused"] = bytes_moved_fused(
+            c, 1, h, h, k, k, ho, ho, V, 4)
+        entry["bytes_moved_unfused"] = bytes_moved_unfused(
+            c, 1, h, h, k, k, ho, ho, V, 4)
+        results[name] = entry
+    return results
+
+
+def run(iters: int = 5, quick: bool = False):
+    out = []
+    for name, entry in measure(iters=iters, quick=quick).items():
+        sh = entry["shape"]
+        for plan, _ in PLANS:
+            out.append(row(f"conv_fused.{name}.{plan}", entry[plan],
+                           f"C={sh['c']} H={sh['h']} O={sh['o']} k={sh['k']}"))
+        out.append(row(
+            f"conv_fused.{name}.speedup", 0.0,
+            f"fused_vs_two_kernel={entry['fused_speedup_vs_two_kernel']:.2f}x "
+            f"fused_vs_transposed={entry['fused_speedup_vs_transposed']:.2f}x "
+            f"bytes_fused/unfused="
+            f"{entry['bytes_moved_fused'] / entry['bytes_moved_unfused']:.2f}"))
+    return out
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--json", action="store_true",
+                    help="write BENCH_conv.json (perf trajectory artifact)")
+    ap.add_argument("--quick", action="store_true",
+                    help="two deepest layers, 3 iters (CI smoke)")
+    ap.add_argument("--iters", type=int, default=None)
+    args = ap.parse_args(argv)
+
+    iters = args.iters if args.iters is not None else (3 if args.quick else 5)
+    results = measure(iters=iters, quick=args.quick)
+    for name, entry in results.items():
+        for plan, _ in PLANS:
+            print(row(f"conv_fused.{name}.{plan}", entry[plan]))
+        print(row(f"conv_fused.{name}.speedup", 0.0,
+                  f"fused_vs_two_kernel="
+                  f"{entry['fused_speedup_vs_two_kernel']:.2f}x"))
+    if args.json:
+        payload = {
+            "backend": jax.default_backend(),
+            "sparsity": SPARSITY,
+            "v": V,
+            "iters": iters,
+            "layers": results,
+        }
+        path = Path(__file__).resolve().parent.parent / "BENCH_conv.json"
+        path.write_text(json.dumps(payload, indent=1))
+        print(f"wrote {path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -10,6 +10,7 @@ Prints ``name,us_per_call,derived`` CSV.  Mapping to the paper:
   bench_layout       -> Fig. 12: CNHW vs NHWC
   bench_roofline     -> assignment §Roofline from the dry-run artifacts
   bench_dispatch     -> §3.3: dispatched vs fixed-backend operator selection
+  bench_conv_fused   -> fused conv megakernel vs two-kernel/XLA plans
   bench_serve_scheduler -> continuous-batching scheduler vs static engine
 
 ``--quick`` runs a smoke subset (conv layers + dispatch, 3 iters) fast
@@ -28,6 +29,7 @@ def _modules():
     from benchmarks import (
         bench_accuracy,
         bench_blockwidth,
+        bench_conv_fused,
         bench_conv_layers,
         bench_dispatch,
         bench_e2e,
@@ -39,6 +41,7 @@ def _modules():
 
     return [
         ("fig5_conv_layers", bench_conv_layers),
+        ("conv_fused", bench_conv_fused),
         ("fig6_8_fusion", bench_fusion),
         ("fig9_blockwidth", bench_blockwidth),
         ("table1_accuracy", bench_accuracy),

@@ -14,3 +14,6 @@ python -m repro.launch.serve --arch smollm-360m --smoke --continuous \
 
 echo "== quick benchmarks =="
 python -m benchmarks.run --quick
+
+echo "== conv megakernel smoke (writes BENCH_conv.json) =="
+python -m benchmarks.bench_conv_fused --quick --json

@@ -18,6 +18,11 @@ from repro.core.formats import (  # noqa: F401
     pack_colwise,
     unpack_colwise,
 )
+from repro.core.sparse_conv import (  # noqa: F401
+    compress_conv_layer,
+    conv_apply,
+    conv_init,
+)
 from repro.core.sparse_linear import (  # noqa: F401
     Boxed,
     box_map,

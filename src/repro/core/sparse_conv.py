@@ -1,0 +1,138 @@
+"""SparseConv: the conv-layer abstraction mirroring ``sparse_linear``.
+
+Vision models build conv weights through ``conv_init`` and apply them through
+``conv_apply`` so the paper's column-wise N:M technique — and the profiled
+execution plan behind it (fused megakernel / two-kernel strip-major / XLA
+reference, see ``repro.kernels.conv_gemm``) — is a config switch, not a code
+path per model.  Compressed layers route through ``repro.dispatch.best_impl``
+with real params, exactly like ``linear_apply``; the ambient
+``dispatch.phase_scope`` tag is honoured, so a conv traced inside a serving
+phase resolves a phase-tagged profile entry.
+
+The GEMM view of a conv is [O, Kh*Kw*C]: pruning is column-wise over the
+flattened (kh, kw, c) reduction dim, and the compressed params are the same
+``{"values": [n_tiles, k_kept, T], "idx": [n_tiles, k_kept]}`` pair the
+linear layers use (Boxed with the same logical axes, so sharding rules carry
+over unchanged).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import formats
+from repro.core.pruning import SparsityConfig
+from repro.core.sparse_linear import Boxed
+
+
+def conv_init(
+    key: jax.Array,
+    c_in: int,
+    c_out: int,
+    kh: int,
+    kw: int,
+    cfg: SparsityConfig,
+    *,
+    dtype=jnp.float32,
+    use_bias: bool = False,
+    scale: Optional[float] = None,
+):
+    """Create a (possibly pruned) conv layer's params as a Boxed dict.
+
+    Compressed formats store the GEMM-view compressed pair (values, idx)
+    over the [Kh*Kw*C, O] weight matrix; ``masked`` stores the OHWI kernel
+    with the column-wise mask applied plus the mask itself (training / mask
+    refresh, mirroring ``linear_init``); dense stores an OHWI kernel ``w``.
+    ``conv_apply`` needs the same (kh, kw) statics back.
+    """
+    d_in = kh * kw * c_in
+    prune = cfg.applies_to(d_in, c_out)
+    params: dict[str, Any] = {}
+    if prune and cfg.format in ("compressed_xla", "compressed_pallas"):
+        values, idx = formats.init_compressed(key, d_in, c_out, cfg, dtype, scale)
+        params["values"] = Boxed(values, ("tile", "kept", None))
+        params["idx"] = Boxed(idx, ("tile", None))
+    else:
+        if scale is None:
+            scale = 1.0 / np.sqrt(d_in)
+        w = jax.random.normal(key, (c_out, kh, kw, c_in), dtype)
+        w = w * jnp.asarray(scale, dtype)
+        if prune and cfg.format == "masked":
+            from repro.core.pruning import colwise_nm_mask
+
+            wmat = w.reshape(c_out, d_in).T  # GEMM view [K, O]
+            meta = formats.meta_for(d_in, c_out, cfg)
+            mask = colwise_nm_mask(wmat, cfg.sparsity, m=cfg.m,
+                                   tile=meta.tile)
+            w = ((wmat * mask).T.reshape(c_out, kh, kw, c_in)).astype(dtype)
+            params["mask"] = Boxed(
+                mask.T.reshape(c_out, kh, kw, c_in),
+                (None, None, None, "embed"))
+        elif prune:
+            raise ValueError(
+                f"conv_init does not support pruning format {cfg.format!r}")
+        params["w"] = Boxed(w, (None, None, None, "embed"))
+    if use_bias:
+        params["b"] = Boxed(jnp.zeros((c_out,), dtype), (None,))
+    return params
+
+
+def conv_apply(
+    params,
+    x_cnhw: jax.Array,
+    *,
+    kh: int,
+    kw: int,
+    stride: int = 1,
+    pad: int = 0,
+    v: int = 128,
+    impl: Optional[str] = None,
+) -> jax.Array:
+    """Apply a layer created by ``conv_init`` (unboxed params) to a CNHW map.
+
+    Compressed layers route through ``repro.dispatch``: the execution plan
+    (fused megakernel geometry variant, two-kernel strip-major, XLA
+    reference) is chosen per conv shape from the profile DB / platform
+    heuristic; ``impl=`` forces a specific candidate.  Dense layers run the
+    lax reference conv.  Returns CNHW output [O, B, Ho, Wo].
+    """
+    if "values" in params:
+        from repro import dispatch as _dispatch
+
+        values, idx = params["values"], params["idx"]
+        c, b, h, w = x_cnhw.shape
+        n_tiles, k_kept, tile = (int(s) for s in values.shape)
+        key = _dispatch.conv_key(
+            c, h, w, n_tiles * tile, kh, kw, stride, pad, k_kept, tile,
+            v=v, dtype=x_cnhw.dtype, batch=b, phase=_dispatch.current_phase())
+        spec = _dispatch.best_impl(key, param_keys=("values", "idx"),
+                                   force=impl)
+        y = spec.apply({"values": values, "idx": idx}, x_cnhw,
+                       kh=kh, kw=kw, stride=stride, pad=pad, v=v)
+    else:
+        from repro.kernels.conv_gemm.ref import conv2d_cnhw_ref
+
+        w = params["w"]
+        if "mask" in params:
+            w = w * params["mask"].astype(w.dtype)
+        y = conv2d_cnhw_ref(x_cnhw, w, stride=stride, pad=pad)
+    if "b" in params:
+        y = y + params["b"][:, None, None, None]
+    return y
+
+
+def compress_conv_layer(params, kh: int, kw: int, cfg: SparsityConfig):
+    """Convert a dense conv layer (OHWI ``w``) into compressed GEMM format."""
+    from repro.kernels.conv_gemm.ops import compress_conv_weights
+
+    w = params["w"]
+    w = w.value if isinstance(w, Boxed) else w
+    values, idx, _meta = compress_conv_weights(w, cfg)
+    out = {"values": values, "idx": idx}
+    if "b" in params:
+        b = params["b"]
+        out["b"] = b.value if isinstance(b, Boxed) else b
+    return out

@@ -1,10 +1,14 @@
 """Backwards-compat shim — the auto-tuner now lives in ``repro.dispatch``.
 
 The seed's ad-hoc ``Tuner`` grew into the operator dispatch & profiling
-subsystem (``repro.dispatch``): an operator registry of candidate
-implementations, a profiler harness, and a versioned, environment-
-fingerprinted profile DB.  Import from ``repro.dispatch`` in new code; this
-module only re-exports the original names so existing imports keep working.
+subsystem (``repro.dispatch``), and its block-geometry tier has since been
+absorbed into the dispatch *candidate space*: each Pallas kernel registers
+one geometry-pinned candidate per point of ``dispatch.LINEAR_GEOMETRY`` /
+``dispatch.FUSED_CONV_GEOMETRY``, so a single ``profile_op`` pass selects
+implementation and (tile, block_b, block_k) geometry jointly — there is no
+separate tuning pass anymore.  ``Tuner`` is a deprecated shim whose block
+grid is derived from the same registry geometry; import from
+``repro.dispatch`` in new code.
 """
 from repro.dispatch.profiler import (  # noqa: F401
     Candidate,

@@ -3,6 +3,8 @@
 # races the feasible ones, a fingerprinted persistent profile DB, and the
 # best_impl() selection layer every sparse call site consults.
 from repro.dispatch.registry import (  # noqa: F401
+    FUSED_CONV_GEOMETRY,
+    LINEAR_GEOMETRY,
     REGISTRY,
     VMEM_BYTES,
     ImplSpec,
@@ -10,6 +12,7 @@ from repro.dispatch.registry import (  # noqa: F401
     OpKey,
     bucket_batch,
     conv_key,
+    geometry_name,
     linear_key,
     linear_key_from,
 )

@@ -260,6 +260,14 @@ def plan_params(params, *, batch_hint: int = 8, db: Optional[ProfileDB] = None,
     prefill and decode shapes are profiled separately and the engine can pin
     per-phase implementations.  Without it the single ``batch_hint`` plans
     phase-agnostic keys exactly as before.
+
+    Known limitation: the scan assumes every (values, idx) pair is a linear
+    layer.  ``conv_init`` params share that shape, so a tree containing conv
+    layers gets them planned under (harmless but useless) linear tokens while
+    the conv_key tokens ``conv_apply`` looks up stay cold — conv profiling
+    happens lazily at the call site for now.  Wiring conv-aware planning in
+    is part of the "vision configs through conv_apply" ROADMAP item (the
+    params tree needs an op discriminator first).
     """
     if not dispatch_enabled():
         # legacy fixed routing ignores the plan; skip the tree walk and the

@@ -11,12 +11,15 @@ executable.  Here the same loop is split into reusable pieces:
     atomic (temp file + ``os.replace``) so a crash mid-save never corrupts
     the DB, and an in-memory LRU bounds resident entries.
   * :func:`profile_op` — wall-clocks every feasible registered candidate for
-    an :class:`OpKey` and records the winner.
-  * :class:`Tuner` — the seed's block-geometry auto-tuner, absorbed here
-    (``repro.core.tuning`` is now a thin shim over this class).  It answers
-    the finer-grained question "which (tile, block_b, block_k) geometry for
-    the compressed kernels", while ``profile_op`` answers "which candidate
-    implementation altogether".
+    an :class:`OpKey` and records the winner.  Since block geometry was
+    folded into the candidate space (``registry.LINEAR_GEOMETRY`` /
+    ``registry.FUSED_CONV_GEOMETRY`` — one geometry-pinned candidate per grid
+    point), this single pass selects implementation AND geometry jointly.
+  * :class:`Tuner` — DEPRECATED compatibility shim for the seed's separate
+    block-geometry tier.  Its candidate enumeration is now just a view over
+    the registry's geometry grid; new code should profile an
+    :class:`OpKey` via :func:`profile_op` (or ``dispatch.ensure_profiled``)
+    and read the winning candidate's ``geometry`` instead.
 """
 from __future__ import annotations
 
@@ -189,7 +192,12 @@ def profile_op(key: OpKey, db: Optional[ProfileDB] = None, *,
 
 
 # ---------------------------------------------------------------------------
-# Geometry-level tuning (absorbed seed Tuner: tile x block_b x block_k)
+# DEPRECATED geometry-level tuning shim (seed Tuner: tile x block_b x block_k)
+#
+# Geometry now lives in the candidate space: profile_op over the registry's
+# geometry-pinned candidates replaces this tier.  The class is kept only so
+# seed-era imports (`repro.core.tuning.Tuner`) keep working; its block grid
+# is derived from the same registry.LINEAR_GEOMETRY the candidates use.
 # ---------------------------------------------------------------------------
 
 
@@ -234,8 +242,11 @@ def _time_xla_candidate(batch, d_in, d_out, sparsity, tile, iters=5) -> float:
 
 
 def enumerate_candidates(d_in: int, d_out: int) -> List[Candidate]:
+    from repro.dispatch.registry import LINEAR_GEOMETRY
+
     tiles = sorted({t for t in (32, 64, 128, 256, 512, d_out) if d_out % t == 0})
-    blocks = [(128, 128), (256, 128), (128, 256), (512, 128)]
+    # single source of geometry truth: the registry's candidate grid
+    blocks = [(dict(g)["bb"], dict(g)["bk"]) for g in LINEAR_GEOMETRY]
     out = []
     for t in tiles:
         for bb, bk in blocks:
@@ -246,7 +257,12 @@ def enumerate_candidates(d_in: int, d_out: int) -> List[Candidate]:
 
 
 class Tuner:
-    """Block-geometry auto-tuner over (tile, block_b, block_k) candidates.
+    """DEPRECATED block-geometry auto-tuner over (tile, block_b, block_k).
+
+    Geometry selection moved into the dispatch candidate space — register a
+    geometry variant (see ``registry.LINEAR_GEOMETRY``) and profile the
+    :class:`OpKey` instead; the winning candidate's ``geometry`` is the tuned
+    block configuration.  This shim remains for seed-era callers.
 
     Backed by a :class:`ProfileDB`, so selections are versioned, fingerprinted
     and atomically persisted; a seed-era ``tuning_cache.json`` (bare dict, no
@@ -300,6 +316,7 @@ class Tuner:
                     (o.wall_us for o in feasible if o.tile == c.tile and o.wall_us),
                     1e9,
                 )
+                c.wall_us = wall  # every block point carries its tile's wall
                 c.score = wall * (1.0 + c.vmem_bytes / VMEM_BYTES * 0.1)
                 if best is None or c.score < best.score:
                     best = c

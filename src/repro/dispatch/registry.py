@@ -13,7 +13,18 @@ a list of :class:`ImplSpec` candidates, each declaring
   * ``vmem_bytes`` — analytic footprint used for tie-breaks and fallbacks,
   * ``apply``      — how to execute the layer's params on an input,
   * ``make_bench`` — how to synthesize a self-contained benchmark closure for
-    the profiler (operands built from the key alone, no real params needed).
+    the profiler (operands built from the key alone, no real params needed),
+  * ``geometry``   — the execution-geometry knobs (block sizes, strip width)
+    this variant is pinned to.
+
+Execution geometry lives IN the candidate space: a Pallas kernel registers
+one candidate per point of its geometry grid (``compressed_pallas`` plus
+``compressed_pallas@bb256_bk128`` …, ``fused_sparse_pallas`` plus
+``fused_sparse_pallas@v256_bk128`` …), each with its own VMEM predicate, so a
+single ``profile_op`` pass picks implementation AND geometry jointly and
+bakes both into one profile-DB record.  This replaced the seed's separate
+``Tuner`` tier (tile × block_b × block_k), which survives only as a
+deprecated compatibility shim.
 
 New kernels/backends register here once and every call site that consults
 ``repro.dispatch.best_impl`` picks them up — no per-call-site if/else chains.
@@ -21,6 +32,7 @@ New kernels/backends register here once and every call site that consults
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 VMEM_BYTES = 16 * 2 ** 20  # ~16 MB usable per TPU core (paper §3.3 analog)
@@ -116,7 +128,11 @@ def linear_key_from(x_shape: Sequence[int], values_shape: Sequence[int],
 
 def conv_key(c: int, h: int, w: int, o: int, kh: int, kw: int, stride: int,
              pad: int, k_kept: int, tile: int, v: int = 128,
-             dtype="float32", batch: int = 1) -> OpKey:
+             dtype="float32", batch: int = 1, phase: str = "") -> OpKey:
+    """OpKey for a conv operator instance.  ``phase`` mirrors ``linear_key``:
+    a conv traced inside ``dispatch.phase_scope`` gets a phase-tagged token
+    (and hence its own profile-DB entry) instead of silently profiling
+    phase-agnostic."""
     n_pos_h = (h + 2 * pad - kh) // stride + 1
     n_pos_w = (w + 2 * pad - kw) // stride + 1
     return OpKey(
@@ -125,12 +141,20 @@ def conv_key(c: int, h: int, w: int, o: int, kh: int, kw: int, stride: int,
         dtype=_dtype_tag(dtype),
         extra=(("b", batch), ("c", c), ("h", h), ("w", w), ("kh", kh),
                ("kw", kw), ("s", stride), ("p", pad), ("v", v)),
+        phase=phase,
     )
 
 
 @dataclasses.dataclass(frozen=True)
 class ImplSpec:
-    """One candidate implementation of a logical op."""
+    """One candidate implementation of a logical op.
+
+    A Pallas kernel family registers one ImplSpec per execution-geometry
+    point (``geometry`` carries the block sizes / strip width the variant is
+    pinned to; the default-geometry variant keeps the bare family name, the
+    rest get an ``@k1v1_k2v2`` suffix via :func:`geometry_name`), so the
+    profiler selects implementation and geometry in one pass.
+    """
 
     name: str
     op: str
@@ -139,11 +163,28 @@ class ImplSpec:
     priority: int                      # heuristic rank (lower preferred)
     feasible: Callable[[OpKey], Tuple[bool, str]]
     vmem_bytes: Callable[[OpKey], int]
-    apply: Optional[Callable] = None   # (params, x) -> y
+    apply: Optional[Callable] = None   # (params, x, **op_args) -> y
     make_bench: Optional[Callable] = None  # key -> zero-arg timed closure
+    geometry: Tuple[Tuple[str, int], ...] = ()
+
+    def geom(self, name: str, default: int = 0) -> int:
+        for k, v in self.geometry:
+            if k == name:
+                return v
+        return default
 
     def __repr__(self):
         return f"ImplSpec({self.op}:{self.name}, backend={self.backend})"
+
+
+def geometry_name(base: str, geometry: Tuple[Tuple[str, int], ...],
+                  default: Tuple[Tuple[str, int], ...]) -> str:
+    """Candidate name for one geometry point: the default geometry keeps the
+    bare family name (profile-DB/force back-compat), others get a suffix like
+    ``base@bb256_bk128``."""
+    if geometry == default:
+        return base
+    return base + "@" + "_".join(f"{k}{v}" for k, v in geometry)
 
 
 class OperatorRegistry:
@@ -206,23 +247,63 @@ def _no_vmem(key: OpKey) -> int:
     return 0
 
 
-def _pallas_feasible(key: OpKey) -> Tuple[bool, str]:
+# Per-op geometry grids.  Each point becomes one registered candidate; the
+# first entry is the default geometry and keeps the bare family name.
+LINEAR_GEOMETRY = (
+    (("bb", 128), ("bk", 128)),
+    (("bb", 256), ("bk", 128)),
+    (("bb", 128), ("bk", 64)),
+)
+FUSED_CONV_GEOMETRY = (
+    (("v", 128), ("bk", 128)),
+    (("v", 256), ("bk", 128)),
+    (("v", 128), ("bk", 64)),
+)
+
+
+def _key_itemsize(key: OpKey) -> int:
+    """Operand byte width from the key's dtype tag (f32 maps under-count VMEM
+    2x if assumed bf16 — load-bearing for the whole-map-resident megakernel)."""
+    return 4 if key.dtype == "f32" else 2
+
+
+def _tile_ok(key: OpKey) -> Tuple[bool, str]:
     if key.d_out % key.tile != 0:
         return False, f"d_out={key.d_out} not divisible by tile={key.tile}"
     if key.tile % 8 != 0:
         return False, f"tile={key.tile} not a multiple of 8 (sublane)"
-    vm = _pallas_vmem(key)
-    if vm > VMEM_BYTES:
-        return False, f"VMEM {vm} > budget {VMEM_BYTES}"
     return True, "ok"
 
 
-def _pallas_vmem(key: OpKey) -> int:
-    from repro.kernels.colwise_nm.kernel import vmem_bytes
+def _pallas_vmem_for(block_b: int, block_k: int):
+    def vm(key: OpKey) -> int:
+        from repro.kernels.colwise_nm.kernel import vmem_bytes
 
-    block_b = min(128, key.batch)
-    block_k = min(128, key.k_kept)
-    return vmem_bytes(block_b, block_k, key.d_in, min(key.tile, 512))
+        return vmem_bytes(min(block_b, key.batch), min(block_k, key.k_kept),
+                          key.d_in, min(key.tile, 512),
+                          in_bytes=_key_itemsize(key))
+
+    return vm
+
+
+def _pallas_feasible_for(block_b: int, block_k: int):
+    vm_fn = _pallas_vmem_for(block_b, block_k)
+
+    def feasible(key: OpKey) -> Tuple[bool, str]:
+        ok, reason = _tile_ok(key)
+        if not ok:
+            return ok, reason
+        vm = vm_fn(key)
+        if vm > VMEM_BYTES:
+            return False, f"VMEM {vm} > budget {VMEM_BYTES}"
+        return True, "ok"
+
+    return feasible
+
+
+# default-geometry predicates (shared by the strip-major conv candidate)
+_pallas_feasible = _pallas_feasible_for(128, 128)
+_pallas_vmem = _pallas_vmem_for(128, 128)
 
 
 def _jnp_dtype(tag: str):
@@ -264,7 +345,7 @@ def _bench_linear_xla(key: OpKey):
     return lambda: f(x)
 
 
-def _bench_linear_pallas(key: OpKey):
+def _bench_linear_pallas(key: OpKey, block_b: int = 128, block_k: int = 128):
     import jax
 
     from repro.kernels.colwise_nm import ops as cops
@@ -273,7 +354,9 @@ def _bench_linear_pallas(key: OpKey):
     values, idx = _synth_compressed(key)
     # jitted like every other candidate's closure: profiling must compare
     # steady-state (traced) execution, not eager per-op dispatch overhead
-    f = jax.jit(lambda x: cops.colwise_nm_matmul(x, values, idx))
+    f = jax.jit(lambda x: cops.colwise_nm_matmul(x, values, idx,
+                                                 block_b=block_b,
+                                                 block_k=block_k))
     return lambda: f(x)
 
 
@@ -292,10 +375,11 @@ def _apply_linear_xla(params, x):
     return forward_compressed_xla(x, params["values"], params["idx"])
 
 
-def _apply_linear_pallas(params, x):
+def _apply_linear_pallas(params, x, block_b: int = 128, block_k: int = 128):
     from repro.kernels.colwise_nm import ops as cops
 
-    return cops.colwise_nm_matmul(x, params["values"], params["idx"])
+    return cops.colwise_nm_matmul(x, params["values"], params["idx"],
+                                  block_b=block_b, block_k=block_k)
 
 
 def _apply_linear_masked(params, x):
@@ -315,12 +399,21 @@ REGISTRY.register(ImplSpec(
     apply=_apply_linear_xla, make_bench=_bench_linear_xla,
 ))
 
-REGISTRY.register(ImplSpec(
-    name="compressed_pallas", op="linear", backend="pallas",
-    requires=frozenset({"values", "idx"}), priority=10,
-    feasible=_pallas_feasible, vmem_bytes=_pallas_vmem,
-    apply=_apply_linear_pallas, make_bench=_bench_linear_pallas,
-))
+# one candidate per geometry point — profile_op races them all, so a single
+# profiling pass picks implementation AND block geometry jointly
+for _geom in LINEAR_GEOMETRY:
+    _bb, _bk = dict(_geom)["bb"], dict(_geom)["bk"]
+    REGISTRY.register(ImplSpec(
+        name=geometry_name("compressed_pallas", _geom, LINEAR_GEOMETRY[0]),
+        op="linear", backend="pallas",
+        requires=frozenset({"values", "idx"}), priority=10,
+        feasible=_pallas_feasible_for(_bb, _bk),
+        vmem_bytes=_pallas_vmem_for(_bb, _bk),
+        apply=functools.partial(_apply_linear_pallas, block_b=_bb, block_k=_bk),
+        make_bench=functools.partial(_bench_linear_pallas, block_b=_bb,
+                                     block_k=_bk),
+        geometry=_geom,
+    ))
 
 REGISTRY.register(ImplSpec(
     name="masked", op="linear", backend="xla",
@@ -386,18 +479,86 @@ def _bench_conv_im2col_dense(key: OpKey):
     return lambda: f(x)
 
 
-def _bench_conv_sparse(key: OpKey, use_pallas: bool):
-    import jax
+def _apply_conv_xla(params, x, *, kh, kw, stride=1, pad=0, v=128):
+    from repro.kernels.conv_gemm.ops import conv2d_xla_ref
 
-    from repro.kernels.conv_gemm.ops import conv2d_colwise_sparse
+    return conv2d_xla_ref(x, params["values"], params["idx"], kh=kh, kw=kw,
+                          stride=stride, pad=pad, v=v)
+
+
+def _apply_conv_two_kernel(params, x, *, kh, kw, stride=1, pad=0, v=128):
+    from repro.kernels.conv_gemm.ops import conv2d_two_kernel
+
+    return conv2d_two_kernel(x, params["values"], params["idx"], kh=kh, kw=kw,
+                             stride=stride, pad=pad, v=v)
+
+
+def _apply_conv_fused(params, x, *, kh, kw, stride=1, pad=0, v=128,
+                      geom_v=128, geom_bk=128):
+    # the megakernel's strips never exist in HBM, so its strip width is pure
+    # execution geometry — it uses the profiled geom_v, not the caller's v
+    from repro.kernels.conv_gemm.ops import conv2d_fused
+
+    return conv2d_fused(x, params["values"], params["idx"], kh=kh, kw=kw,
+                        stride=stride, pad=pad, v=geom_v, block_k=geom_bk)
+
+
+def _bench_conv(key: OpKey, apply_fn):
+    import jax
 
     x = _synth_conv_input(key)
     a = _conv_args(key)
     values, idx = _synth_compressed(key)
-    f = jax.jit(lambda x: conv2d_colwise_sparse(
-        x, values, idx, kh=a["kh"], kw=a["kw"], stride=a["stride"],
-        pad=a["pad"], v=a["v"], use_pallas=use_pallas))
+    params = {"values": values, "idx": idx}
+    f = jax.jit(lambda x: apply_fn(params, x, **a))
     return lambda: f(x)
+
+
+def _strips_vmem(key: OpKey) -> int:
+    from repro.kernels.colwise_nm.kernel import strips_vmem_bytes
+
+    return strips_vmem_bytes(key.d_in, key.get("v", 128),
+                             min(128, key.k_kept), min(key.tile, 512),
+                             in_bytes=_key_itemsize(key))
+
+
+def _strips_feasible(key: OpKey) -> Tuple[bool, str]:
+    ok, reason = _tile_ok(key)
+    if not ok:
+        return ok, reason
+    vm = _strips_vmem(key)
+    if vm > VMEM_BYTES:
+        return False, f"VMEM {vm} > budget {VMEM_BYTES}"
+    return True, "ok"
+
+
+def _fused_vmem_for(geom_v: int, geom_bk: int):
+    def vm(key: OpKey) -> int:
+        from repro.kernels.conv_gemm.kernel import fused_vmem_bytes
+
+        return fused_vmem_bytes(
+            key.get("c"), max(key.get("b", 1), 1), key.get("h"),
+            key.get("w", key.get("h")), geom_v, min(geom_bk, key.k_kept),
+            min(key.tile, 512), in_bytes=_key_itemsize(key))
+
+    return vm
+
+
+def _fused_feasible_for(geom_v: int, geom_bk: int):
+    vm_fn = _fused_vmem_for(geom_v, geom_bk)
+
+    def feasible(key: OpKey) -> Tuple[bool, str]:
+        ok, reason = _tile_ok(key)
+        if not ok:
+            return ok, reason
+        if key.get("c") <= 0 or key.get("h") <= 0:
+            return False, "conv geometry (c, h, w) missing from key extras"
+        vm = vm_fn(key)  # the whole CNHW feature map must sit in VMEM
+        if vm > VMEM_BYTES:
+            return False, f"VMEM {vm} > budget {VMEM_BYTES}"
+        return True, "ok"
+
+    return feasible
 
 
 REGISTRY.register(ImplSpec(
@@ -418,12 +579,31 @@ REGISTRY.register(ImplSpec(
     name="im2col_sparse_xla", op="conv", backend="xla",
     requires=frozenset({"values", "idx"}), priority=10,
     feasible=_always, vmem_bytes=_no_vmem,
-    make_bench=lambda key: _bench_conv_sparse(key, use_pallas=False),
+    apply=_apply_conv_xla,
+    make_bench=lambda key: _bench_conv(key, _apply_conv_xla),
 ))
 
+# two-kernel Pallas plan: pack kernel + strip-major GEMM (no HBM relayout)
 REGISTRY.register(ImplSpec(
     name="im2col_sparse_pallas", op="conv", backend="pallas",
     requires=frozenset({"values", "idx"}), priority=10,
-    feasible=_pallas_feasible, vmem_bytes=_pallas_vmem,
-    make_bench=lambda key: _bench_conv_sparse(key, use_pallas=True),
+    feasible=_strips_feasible, vmem_bytes=_strips_vmem,
+    apply=_apply_conv_two_kernel,
+    make_bench=lambda key: _bench_conv(key, _apply_conv_two_kernel),
 ))
+
+# fused megakernel: one geometry-pinned candidate per (strip width, block_k)
+for _geom in FUSED_CONV_GEOMETRY:
+    _gv, _gbk = dict(_geom)["v"], dict(_geom)["bk"]
+    _apply = functools.partial(_apply_conv_fused, geom_v=_gv, geom_bk=_gbk)
+    REGISTRY.register(ImplSpec(
+        name=geometry_name("fused_sparse_pallas", _geom,
+                           FUSED_CONV_GEOMETRY[0]),
+        op="conv", backend="pallas",
+        requires=frozenset({"values", "idx"}), priority=5,
+        feasible=_fused_feasible_for(_gv, _gbk),
+        vmem_bytes=_fused_vmem_for(_gv, _gbk),
+        apply=_apply,
+        make_bench=functools.partial(_bench_conv, apply_fn=_apply),
+        geometry=_geom,
+    ))

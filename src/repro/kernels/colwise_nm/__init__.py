@@ -1,3 +1,11 @@
-from repro.kernels.colwise_nm.kernel import colwise_nm_matmul_pallas, vmem_bytes  # noqa: F401
-from repro.kernels.colwise_nm.ops import colwise_nm_matmul  # noqa: F401
+from repro.kernels.colwise_nm.kernel import (  # noqa: F401
+    colwise_nm_matmul_pallas,
+    colwise_nm_matmul_strips_pallas,
+    strips_vmem_bytes,
+    vmem_bytes,
+)
+from repro.kernels.colwise_nm.ops import (  # noqa: F401
+    colwise_nm_matmul,
+    colwise_nm_matmul_strips,
+)
 from repro.kernels.colwise_nm.ref import colwise_nm_matmul_ref  # noqa: F401

@@ -31,6 +31,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels.pltpu_compat import COMPILER_PARAMS as _COMPILER_PARAMS
+from repro.kernels.pltpu_compat import ceil_to, dot_f32
 
 
 def _kernel(x_ref, idx_ref, v_ref, o_ref, acc_ref, *, n_kc: int, out_dtype, interpret: bool):
@@ -47,23 +48,11 @@ def _kernel(x_ref, idx_ref, v_ref, o_ref, acc_ref, *, n_kc: int, out_dtype, inte
     # exists in HBM.  (Mosaic: lane-dim dynamic_gather; validated via
     # interpret mode on CPU.)
     x_sel = jnp.take(x_blk, ids, axis=1)  # [block_b, block_k]
-    v_blk = v_ref[0]
-    if interpret:
-        # XLA:CPU has no bf16xbf16->f32 dot; the TPU path feeds the MXU
-        # native bf16 operands with f32 accumulation.
-        x_sel = x_sel.astype(jnp.float32)
-        v_blk = v_blk.astype(jnp.float32)
-    acc_ref[...] += jnp.dot(
-        x_sel, v_blk, preferred_element_type=jnp.float32
-    )
+    acc_ref[...] += dot_f32(x_sel, v_ref[0], interpret)
 
     @pl.when(kc == n_kc - 1)
     def _flush():
         o_ref[...] = acc_ref[...].astype(out_dtype)
-
-
-def _ceil_to(x: int, m: int) -> int:
-    return (x + m - 1) // m * m
 
 
 def colwise_nm_matmul_pallas(
@@ -84,11 +73,11 @@ def colwise_nm_matmul_pallas(
     n_tiles, k_kept, tile = values.shape
     assert idx.shape == (n_tiles, k_kept), (idx.shape, values.shape)
 
-    block_b = min(block_b, _ceil_to(B, 8))
-    block_k = min(block_k, _ceil_to(k_kept, 8))
+    block_b = min(block_b, ceil_to(B, 8))
+    block_k = min(block_k, ceil_to(k_kept, 8))
 
-    b_pad = _ceil_to(B, block_b)
-    k_pad = _ceil_to(k_kept, block_k)
+    b_pad = ceil_to(B, block_b)
+    k_pad = ceil_to(k_kept, block_k)
     if b_pad != B:
         x = jnp.pad(x, ((0, b_pad - B), (0, 0)))
     if k_pad != k_kept:
@@ -117,6 +106,91 @@ def colwise_nm_matmul_pallas(
         interpret=interpret,
     )(x, idx, values)
     return out[:B]
+
+
+# ---------------------------------------------------------------------------
+# Strip-major entry: GEMM directly on packed [n_strips, K, V] strips
+# ---------------------------------------------------------------------------
+
+
+def _strips_kernel(x_ref, idx_ref, v_ref, o_ref, acc_ref, *, n_kc: int,
+                   out_dtype, interpret: bool):
+    kc = pl.program_id(2)
+
+    @pl.when(kc == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    ids = idx_ref[0]  # [block_k] kept reduction rows for this chunk
+    x_blk = x_ref[0]  # [K, V] one packed strip, VMEM resident
+    # sublane-dim gather of the kept strip *rows* — the strips already sit in
+    # the paper's packed layout, so no transpose/relayout ever happens in HBM
+    x_sel = jnp.take(x_blk, ids, axis=0)  # [block_k, V]
+    acc_ref[...] += dot_f32(v_ref[0].T, x_sel, interpret)  # [tile, V]
+
+    @pl.when(kc == n_kc - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(out_dtype)
+
+
+def colwise_nm_matmul_strips_pallas(
+    strips: jax.Array,
+    values: jax.Array,
+    idx: jax.Array,
+    *,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """Column-wise sparse GEMM on packed strips: [n_strips, K, V] -> [O, S*V].
+
+    The strip dim is the Pallas batch grid dim, so the un-fused two-kernel
+    conv path consumes ``im2col_pack`` output directly — no
+    ``transpose(0, 2, 1).reshape`` HBM relayout between the two kernels.
+    Output is [n_tiles*tile, n_strips*V] (the conv's [O, P] layout, P padded
+    to whole strips); the caller slices off the ragged-strip padding.
+    """
+    n_strips, d_in, v = strips.shape
+    n_tiles, k_kept, tile = values.shape
+    assert idx.shape == (n_tiles, k_kept), (idx.shape, values.shape)
+
+    block_k = min(block_k, ceil_to(k_kept, 8))
+    k_pad = ceil_to(k_kept, block_k)
+    if k_pad != k_kept:
+        values = jnp.pad(values, ((0, 0), (0, k_pad - k_kept), (0, 0)))
+        idx = jnp.pad(idx, ((0, 0), (0, k_pad - k_kept)))
+    n_kc = k_pad // block_k
+
+    grid = (n_strips, n_tiles, n_kc)
+    out = pl.pallas_call(
+        functools.partial(_strips_kernel, n_kc=n_kc, out_dtype=strips.dtype,
+                          interpret=interpret),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, d_in, v), lambda s, t, kc: (s, 0, 0)),
+            pl.BlockSpec((1, block_k), lambda s, t, kc: (t, kc)),
+            pl.BlockSpec((1, block_k, tile), lambda s, t, kc: (t, kc, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile, v), lambda s, t, kc: (t, s)),
+        out_shape=jax.ShapeDtypeStruct((n_tiles * tile, n_strips * v),
+                                       strips.dtype),
+        scratch_shapes=[pltpu.VMEM((tile, v), jnp.float32)],
+        compiler_params=_COMPILER_PARAMS(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(strips, idx, values)
+    return out
+
+
+def strips_vmem_bytes(d_in: int, v: int, block_k: int, tile: int,
+                      in_bytes: int = 2) -> int:
+    """Analytic VMEM footprint of one strip-major grid step."""
+    strip = d_in * v * in_bytes
+    x_sel = block_k * v * in_bytes
+    v_blk = block_k * tile * in_bytes
+    acc = tile * v * 4
+    out = tile * v * in_bytes
+    return strip + x_sel + v_blk + acc + out
 
 
 def vmem_bytes(block_b: int, block_k: int, d_in: int, tile: int, in_bytes: int = 2) -> int:

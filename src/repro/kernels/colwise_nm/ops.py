@@ -12,17 +12,31 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.colwise_nm.kernel import colwise_nm_matmul_pallas
+from repro.kernels.colwise_nm.kernel import (
+    colwise_nm_matmul_pallas,
+    colwise_nm_matmul_strips_pallas,
+)
+from repro.kernels.pltpu_compat import should_interpret
 
 
-def _should_interpret() -> bool:
-    return jax.default_backend() != "tpu"
+@functools.partial(jax.jit, static_argnames=("block_k",))
+def colwise_nm_matmul_strips(strips, values, idx, *, block_k: int = 128):
+    """Strip-major sparse GEMM: packed [n_strips, K, V] strips -> [O, S*V].
+
+    Accepts ``im2col_pack`` output directly (strip dim = Pallas batch grid
+    dim), so the two-kernel conv path skips the ``transpose(0,2,1).reshape``
+    HBM relayout entirely.  Columns past the true position count are strip
+    padding; the conv wrapper slices them off.
+    """
+    return colwise_nm_matmul_strips_pallas(
+        strips, values, idx, block_k=block_k, interpret=should_interpret()
+    )
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
 def _matmul(x, values, idx, block_b, block_k):
     return colwise_nm_matmul_pallas(
-        x, values, idx, block_b=block_b, block_k=block_k, interpret=_should_interpret()
+        x, values, idx, block_b=block_b, block_k=block_k, interpret=should_interpret()
     )
 
 

@@ -1,5 +1,12 @@
+from repro.kernels.conv_gemm.kernel import (  # noqa: F401
+    conv2d_fused_pallas,
+    fused_vmem_bytes,
+)
 from repro.kernels.conv_gemm.ops import (  # noqa: F401
     compress_conv_weights,
     conv2d_colwise_sparse,
+    conv2d_fused,
+    conv2d_two_kernel,
+    conv2d_xla_ref,
 )
 from repro.kernels.conv_gemm.ref import conv2d_cnhw_ref  # noqa: F401

@@ -1,0 +1,162 @@
+"""Pallas conv megakernel: fused im2col + pack + column-wise N:M sparse GEMM.
+
+The paper's two building blocks (Algorithm 2's fused im2col+packing and
+Algorithm 1's column-wise sparse micro-kernel) are here collapsed into ONE
+kernel: each packed strip tile is *produced in VMEM* — (kh, kw, c) rows
+gathered straight from the CNHW feature map with the same index arithmetic as
+``im2col_pack/kernel.py`` — and immediately consumed by the in-VMEM
+kept-column gather + dense MXU matmul of ``colwise_nm/kernel.py``.  The patch
+matrix / packed strips never exist in HBM, and because only the *kept* rows of
+each strip are ever materialized, the gather itself is the sparse compression:
+
+  two-kernel path   HBM traffic:  write strips, read strips (transposed
+                    relayout!), write GEMM output          — 3 round-trips
+  this megakernel   HBM traffic:  read feature map, write output — 0 extra
+
+Grid: (n_strips, n_tiles, k_chunks).  Step (s, t, kc) gathers the block_k
+kept rows of chunk kc for output tile t, restricted to strip s's V output
+positions, multiplies by the [block_k, T] compressed weight chunk, and
+accumulates into a float32 [T, V] VMEM scratch.  The output is written
+directly in [O, P] layout (P padded to n_strips*V), so the caller's final
+``y.T`` relayout disappears as well.  Ragged final strips and out-of-map
+(kh, kw) taps are handled with iota-compare masks exactly as in the
+standalone pack kernel.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.pltpu_compat import COMPILER_PARAMS as _COMPILER_PARAMS
+from repro.kernels.pltpu_compat import ceil_to, dot_f32
+
+from repro.kernels.im2col_pack.kernel import strip_tap_coords
+from repro.kernels.im2col_pack.ref import out_size
+
+
+def _kernel(
+    x_ref,
+    idx_ref,
+    v_ref,
+    o_ref,
+    acc_ref,
+    *,
+    kh: int,
+    kw: int,
+    stride: int,
+    pad: int,
+    v: int,
+    c: int,
+    b: int,
+    h: int,
+    w: int,
+    ho: int,
+    wo: int,
+    n_kc: int,
+    out_dtype,
+    interpret: bool,
+):
+    s = pl.program_id(0)
+    kc = pl.program_id(2)
+
+    @pl.when(kc == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    ids = idx_ref[0]  # [block_k] kept (kh, kw, c) row ids for this chunk
+    k_of = ids // c  # kernel-tap index ikh*kw + ikw
+    c_of = ids % c
+    # [block_k, v] source coordinates: row j of the strip tile reads input
+    # channel c_of[j] at tap (ikh[j], ikw[j]) of every position in the strip
+    # (shared im2col index arithmetic — see im2col_pack.kernel)
+    valid, bc, ihc, iwc = strip_tap_coords(
+        s, v=v, ikh=(k_of // kw)[:, None], ikw=(k_of % kw)[:, None],
+        stride=stride, pad=pad, b=b, h=h, w=w, ho=ho, wo=wo)
+    # flat gather from the VMEM-resident feature map — the packed strip tile
+    # is born here and never touches HBM
+    flat = x_ref[...].reshape(c * b * h * w)
+    fidx = ((c_of[:, None] * b + bc[None, :]) * h + ihc) * w + iwc
+    patch = jnp.where(valid, jnp.take(flat, fidx), 0)  # [block_k, v]
+
+    acc_ref[...] += dot_f32(v_ref[0].T, patch, interpret)  # [tile, v]
+
+    @pl.when(kc == n_kc - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(out_dtype)
+
+
+def conv2d_fused_pallas(
+    x: jax.Array,
+    values: jax.Array,
+    idx: jax.Array,
+    *,
+    kh: int,
+    kw: int,
+    stride: int = 1,
+    pad: int = 0,
+    v: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """Fused conv: CNHW map -> [O, n_strips*V] sparse-GEMM output.
+
+    x: [C, B, H, W]; values: [n_tiles, k_kept, T]; idx: [n_tiles, k_kept]
+    with kept rows indexed in the (kh, kw, c)-flattened reduction dim.
+    Columns past B*Ho*Wo are strip padding (zeros); the ops wrapper slices
+    them off and reshapes to CNHW.
+    """
+    c, b, h, w = x.shape
+    ho = out_size(h, kh, stride, pad)
+    wo = out_size(w, kw, stride, pad)
+    n_pos = b * ho * wo
+    n_strips = -(-n_pos // v)
+    n_tiles, k_kept, tile = values.shape
+    assert idx.shape == (n_tiles, k_kept), (idx.shape, values.shape)
+
+    block_k = min(block_k, ceil_to(k_kept, 8))
+    k_pad = ceil_to(k_kept, block_k)
+    if k_pad != k_kept:
+        # zero-valued padding rows gather row 0 but multiply by 0 weights
+        values = jnp.pad(values, ((0, 0), (0, k_pad - k_kept), (0, 0)))
+        idx = jnp.pad(idx, ((0, 0), (0, k_pad - k_kept)))
+    n_kc = k_pad // block_k
+
+    grid = (n_strips, n_tiles, n_kc)
+    out = pl.pallas_call(
+        functools.partial(
+            _kernel, kh=kh, kw=kw, stride=stride, pad=pad, v=v,
+            c=c, b=b, h=h, w=w, ho=ho, wo=wo, n_kc=n_kc,
+            out_dtype=x.dtype, interpret=interpret,
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((c, b, h, w), lambda s, t, kc: (0, 0, 0, 0)),
+            pl.BlockSpec((1, block_k), lambda s, t, kc: (t, kc)),
+            pl.BlockSpec((1, block_k, tile), lambda s, t, kc: (t, kc, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile, v), lambda s, t, kc: (t, s)),
+        out_shape=jax.ShapeDtypeStruct((n_tiles * tile, n_strips * v), x.dtype),
+        scratch_shapes=[pltpu.VMEM((tile, v), jnp.float32)],
+        compiler_params=_COMPILER_PARAMS(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(x, idx, values)
+    return out
+
+
+def fused_vmem_bytes(c: int, b: int, h: int, w: int, v: int, block_k: int,
+                     tile: int, in_bytes: int = 2) -> int:
+    """Analytic VMEM footprint of one megakernel grid step: the whole CNHW
+    feature map stays resident (it is the only input the kernel reads), plus
+    the gathered strip tile, weight chunk, accumulator and output tile."""
+    fmap = c * b * h * w * in_bytes
+    patch = block_k * v * in_bytes
+    v_blk = block_k * tile * in_bytes
+    acc = tile * v * 4
+    out = tile * v * in_bytes
+    return fmap + patch + v_blk + acc + out

@@ -1,10 +1,17 @@
-"""GEMM-based convolution assembled from the paper's two kernels:
+"""GEMM-based convolution in the paper's layouts — three execution plans:
 
-  conv = fused-im2col+pack  ∘  column-wise-N:M sparse GEMM
+  fused megakernel : im2col + pack + sparse GEMM in ONE Pallas kernel; the
+                     packed strips are produced and consumed in VMEM and
+                     never exist in HBM (``conv2d_fused``)
+  two-kernel       : fused im2col+pack kernel, then the strip-major sparse
+                     GEMM consuming [n_strips, K, V] directly — no transpose
+                     relayout between the kernels
+  XLA reference    : pack kernel + gather-einsum GEMM (distribution-friendly)
 
-This is the end-to-end convolution path the paper ships inside XNNPACK:
-the feature map is packed into V-wide strips in one pass, then each strip is
-multiplied by the (compressed) weight matrix with the Algorithm-1 micro-kernel.
+``conv2d_colwise_sparse`` keeps the historical entry point; with
+``use_pallas=None`` (default) it routes through ``repro.dispatch`` and
+executes whichever registered conv candidate (including the megakernel and
+its geometry variants) the profile DB / heuristic picks.
 """
 from __future__ import annotations
 
@@ -16,10 +23,12 @@ import jax.numpy as jnp
 
 from repro.core.formats import ColwiseMeta, meta_for, pack_colwise
 from repro.core.pruning import SparsityConfig, colwise_nm_mask
-from repro.kernels.colwise_nm.ops import colwise_nm_matmul
+from repro.kernels.colwise_nm.ops import colwise_nm_matmul_strips
 from repro.kernels.colwise_nm.ref import colwise_nm_matmul_ref
+from repro.kernels.conv_gemm.kernel import conv2d_fused_pallas
 from repro.kernels.im2col_pack.ops import im2col_pack
 from repro.kernels.im2col_pack.ref import out_size
+from repro.kernels.pltpu_compat import should_interpret
 
 
 def compress_conv_weights(w_ohwi: jax.Array, cfg: SparsityConfig):
@@ -37,6 +46,88 @@ def compress_conv_weights(w_ohwi: jax.Array, cfg: SparsityConfig):
     return values, idx, meta
 
 
+@functools.partial(
+    jax.jit, static_argnames=("kh", "kw", "stride", "pad", "v", "block_k"))
+def conv2d_fused(
+    x_cnhw: jax.Array,
+    values: jax.Array,
+    idx: jax.Array,
+    *,
+    kh: int,
+    kw: int,
+    stride: int = 1,
+    pad: int = 0,
+    v: int = 128,
+    block_k: int = 128,
+) -> jax.Array:
+    """Single-megakernel sparse conv: im2col + pack + sparse GEMM fused.
+
+    The packed strips live only in VMEM (zero intermediate HBM round-trips);
+    the output is produced directly in [O, P] layout.  Returns CNHW output
+    [O, B, Ho, Wo].
+    """
+    c, b, h, w = x_cnhw.shape
+    ho = out_size(h, kh, stride, pad)
+    wo = out_size(w, kw, stride, pad)
+    y = conv2d_fused_pallas(
+        x_cnhw, values, idx, kh=kh, kw=kw, stride=stride, pad=pad, v=v,
+        block_k=block_k, interpret=should_interpret(),
+    )  # [O, n_strips*v]
+    o = y.shape[0]
+    return y[:, : b * ho * wo].reshape(o, b, ho, wo)
+
+
+def conv2d_two_kernel(
+    x_cnhw: jax.Array,
+    values: jax.Array,
+    idx: jax.Array,
+    *,
+    kh: int,
+    kw: int,
+    stride: int = 1,
+    pad: int = 0,
+    v: int = 128,
+    block_k: int = 128,
+) -> jax.Array:
+    """Two-kernel Pallas plan: pack kernel, then strip-major sparse GEMM.
+
+    The GEMM consumes the [n_strips, K, V] strips directly (strip dim as the
+    Pallas batch grid dim) — the packed matrix is written and read once, with
+    no transpose relayout in between.  Returns CNHW output [O, B, Ho, Wo].
+    """
+    c, b, h, w = x_cnhw.shape
+    ho = out_size(h, kh, stride, pad)
+    wo = out_size(w, kw, stride, pad)
+    strips = im2col_pack(x_cnhw, kh=kh, kw=kw, stride=stride, pad=pad, v=v)
+    y = colwise_nm_matmul_strips(strips, values, idx, block_k=block_k)
+    o = y.shape[0]
+    return y[:, : b * ho * wo].reshape(o, b, ho, wo)
+
+
+def conv2d_xla_ref(
+    x_cnhw: jax.Array,
+    values: jax.Array,
+    idx: jax.Array,
+    *,
+    kh: int,
+    kw: int,
+    stride: int = 1,
+    pad: int = 0,
+    v: int = 128,
+) -> jax.Array:
+    """XLA reference plan: pack kernel + gather-einsum GEMM (per-position
+    rows, the layout the distribution-friendly linear path uses)."""
+    c, b, h, w = x_cnhw.shape
+    ho = out_size(h, kh, stride, pad)
+    wo = out_size(w, kw, stride, pad)
+    n_pos = b * ho * wo
+    o = values.shape[0] * values.shape[2]
+    strips = im2col_pack(x_cnhw, kh=kh, kw=kw, stride=stride, pad=pad, v=v)
+    xt = strips.transpose(0, 2, 1).reshape(-1, kh * kw * c)  # [S*V, K]
+    y = colwise_nm_matmul_ref(xt, values, idx)[:n_pos]
+    return y.T.reshape(o, b, ho, wo)
+
+
 def conv2d_colwise_sparse(
     x_cnhw: jax.Array,
     values: jax.Array,
@@ -48,36 +139,28 @@ def conv2d_colwise_sparse(
     v: int = 128,
     use_pallas: Optional[bool] = None,
 ) -> jax.Array:
-    """Sparse convolution: fused im2col+pack, then column-wise sparse GEMM.
+    """Sparse convolution with dispatched execution plan.
 
-    ``use_pallas=None`` (the default) consults ``repro.dispatch`` for the
-    GEMM backend — profiled winner if the profile DB has this conv shape,
-    platform heuristic otherwise.  Pass True/False to force a backend.
-    Returns CNHW output [O, B, Ho, Wo].
+    ``use_pallas=None`` (the default) consults ``repro.dispatch``: the
+    registered conv candidates (fused megakernel geometry variants, two-kernel
+    strip-major, XLA reference) are resolved per shape from the profile DB /
+    platform heuristic.  ``use_pallas=True`` forces the two-kernel Pallas
+    plan, ``False`` the XLA reference plan.  Returns CNHW output
+    [O, B, Ho, Wo].
     """
-    c, b, h, w = x_cnhw.shape
-    ho = out_size(h, kh, stride, pad)
-    wo = out_size(w, kw, stride, pad)
-    n_pos = b * ho * wo
-    n_tiles, k_kept, tile = values.shape
-    o = n_tiles * tile
-
     if use_pallas is None:
         from repro import dispatch as _dispatch
 
-        key = _dispatch.conv_key(c, h, w, o, kh, kw, stride, pad,
+        c, b, h, w = x_cnhw.shape
+        n_tiles, k_kept, tile = values.shape
+        key = _dispatch.conv_key(c, h, w, n_tiles * tile, kh, kw, stride, pad,
                                  k_kept, tile, v=v, dtype=x_cnhw.dtype,
-                                 batch=b)
+                                 batch=b, phase=_dispatch.current_phase())
         spec = _dispatch.best_impl(key, param_keys=("values", "idx"))
-        use_pallas = spec.backend == "pallas"
-
-    strips = im2col_pack(x_cnhw, kh=kh, kw=kw, stride=stride, pad=pad, v=v)
-    # strips: [n_strips, K, V]; GEMM per strip on the transposed strip so the
-    # kernel's batch dim is the V strip columns.
-    xt = strips.transpose(0, 2, 1).reshape(-1, kh * kw * c)  # [n_strips*V, K]
+        return spec.apply({"values": values, "idx": idx}, x_cnhw,
+                          kh=kh, kw=kw, stride=stride, pad=pad, v=v)
     if use_pallas:
-        y = colwise_nm_matmul(xt, values, idx)  # [n_strips*V, O]
-    else:
-        y = colwise_nm_matmul_ref(xt, values, idx)
-    y = y[:n_pos]  # drop ragged strip padding
-    return y.T.reshape(o, b, ho, wo)
+        return conv2d_two_kernel(x_cnhw, values, idx, kh=kh, kw=kw,
+                                 stride=stride, pad=pad, v=v)
+    return conv2d_xla_ref(x_cnhw, values, idx, kh=kh, kw=kw,
+                          stride=stride, pad=pad, v=v)

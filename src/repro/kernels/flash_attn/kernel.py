@@ -21,6 +21,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels.pltpu_compat import COMPILER_PARAMS as _COMPILER_PARAMS
+from repro.kernels.pltpu_compat import ceil_to
 
 NEG = -1e30
 
@@ -65,10 +66,6 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
         o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
 
 
-def _ceil_to(x, m):
-    return (x + m - 1) // m * m
-
-
 def flash_attention_pallas(
     q: jax.Array, k: jax.Array, v: jax.Array, *, causal: bool = True,
     block_q: int = 128, block_k: int = 128, interpret: bool = False,
@@ -78,9 +75,9 @@ def flash_attention_pallas(
     bh, sq, d = q.shape
     sk = k.shape[1]
     scale = 1.0 / math.sqrt(d)
-    block_q = min(block_q, _ceil_to(sq, 8))
-    block_k = min(block_k, _ceil_to(sk, 8))
-    sq_p, sk_p = _ceil_to(sq, block_q), _ceil_to(sk, block_k)
+    block_q = min(block_q, ceil_to(sq, 8))
+    block_k = min(block_k, ceil_to(sk, 8))
+    sq_p, sk_p = ceil_to(sq, block_q), ceil_to(sk, block_k)
     if sq_p != sq:
         q = jnp.pad(q, ((0, 0), (0, sq_p - sq), (0, 0)))
     if sk_p != sk:

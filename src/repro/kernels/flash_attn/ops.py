@@ -5,10 +5,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.flash_attn.kernel import flash_attention_pallas
-
-
-def _should_interpret() -> bool:
-    return jax.default_backend() != "tpu"
+from repro.kernels.pltpu_compat import should_interpret
 
 
 def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
@@ -25,5 +22,5 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
     k2 = k.transpose(0, 2, 1, 3).reshape(b * h, sk, d)
     v2 = v.transpose(0, 2, 1, 3).reshape(b * h, sk, d)
     o = flash_attention_pallas(q2, k2, v2, causal=causal, block_q=block_q,
-                               block_k=block_k, interpret=_should_interpret())
+                               block_k=block_k, interpret=should_interpret())
     return o.reshape(b, h, sq, d).transpose(0, 2, 1, 3)

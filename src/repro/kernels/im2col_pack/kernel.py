@@ -7,11 +7,16 @@ RVV -> TPU translation:
   - vector length V / LMUL     -> strip width V (lane multiples: 128..1024)
   - dynamic VL trim at the     -> iota-compare masks on the final/ragged strip
     feature-map boundary          (no zero-copy padding regions are touched)
-  - scalar loop over (k, c)    -> grid dimensions (strip, k, c); each grid
-    with vector strip copies      step emits one V-wide strip row
+  - scalar loop over (k, c)    -> grid dimensions (strip, k, c-block); each
+    with vector strip copies      grid step emits a [c_block, V] strip tile
 
-Grid: (n_strips, Kh*Kw, C_in).  The output block for step (s, k, c) is the
-single strip row [s, k*C+c, :].
+Grid: (n_strips, Kh*Kw, C_in / c_block).  The source coordinates of a strip
+row depend on (kh, kw) but NOT on the channel, so a whole block of channels
+shares one set of gather indices: step (s, k, cc) emits the strip tile
+[s, k*C + cc*c_block : k*C + (cc+1)*c_block, :] with a single lane-dim
+gather from the [c_block, B*H*W]-flattened feature-map block.  (The seed
+kernel emitted one V-wide row per step — C_in times more grid steps for the
+same data movement.)
 """
 from __future__ import annotations
 
@@ -27,26 +32,18 @@ from repro.kernels.pltpu_compat import COMPILER_PARAMS as _COMPILER_PARAMS
 from repro.kernels.im2col_pack.ref import out_size
 
 
-def _kernel(
-    x_ref,
-    o_ref,
-    *,
-    kh: int,
-    kw: int,
-    stride: int,
-    pad: int,
-    v: int,
-    b: int,
-    h: int,
-    w: int,
-    ho: int,
-    wo: int,
-):
-    s = pl.program_id(0)
-    k = pl.program_id(1)
-    ikh = k // kw
-    ikw = k % kw
+def strip_tap_coords(s, *, v, ikh, ikw, stride, pad, b, h, w, ho, wo):
+    """Source coordinates of strip ``s``'s V output positions at kernel tap
+    (ikh, ikw) — THE im2col index arithmetic, shared by this pack kernel and
+    the conv megakernel (``conv_gemm/kernel.py``) so the stride/pad/boundary
+    semantics cannot drift between them.
 
+    ``ikh``/``ikw`` may be scalars (one tap, -> [v] outputs) or broadcast
+    arrays (e.g. [block_k, 1] for a block of kept rows, -> [block_k, v]).
+    Returns ``(valid, bc, ihc, iwc)``: the out-of-map / ragged-strip mask and
+    clamped (always in-bounds) batch/row/col gather coordinates; ``bc`` stays
+    [v] (positions do not depend on the tap).
+    """
     p = s * v + jax.lax.iota(jnp.int32, v)  # flat output positions of strip
     n_pos = b * ho * wo
     bb = p // (ho * wo)
@@ -57,11 +54,45 @@ def _kernel(
     iw = ow * stride - pad + ikw
     valid = (p < n_pos) & (ih >= 0) & (ih < h) & (iw >= 0) & (iw < w)
     # clamp so the gather itself is always in-bounds; masked after
-    bc = jnp.clip(bb, 0, b - 1)
-    ihc = jnp.clip(ih, 0, h - 1)
-    iwc = jnp.clip(iw, 0, w - 1)
-    vals = x_ref[0, bc, ihc, iwc]  # [v] gather from the channel's B×H×W block
-    o_ref[0, 0, :] = jnp.where(valid, vals, 0).astype(o_ref.dtype)
+    return (valid, jnp.clip(bb, 0, b - 1), jnp.clip(ih, 0, h - 1),
+            jnp.clip(iw, 0, w - 1))
+
+
+def _kernel(
+    x_ref,
+    o_ref,
+    *,
+    kh: int,
+    kw: int,
+    stride: int,
+    pad: int,
+    v: int,
+    c_block: int,
+    b: int,
+    h: int,
+    w: int,
+    ho: int,
+    wo: int,
+):
+    s = pl.program_id(0)
+    k = pl.program_id(1)
+    valid, bc, ihc, iwc = strip_tap_coords(
+        s, v=v, ikh=k // kw, ikw=k % kw, stride=stride, pad=pad,
+        b=b, h=h, w=w, ho=ho, wo=wo)
+    # every channel of the block shares the gather indices: one lane-dim
+    # gather emits the whole [c_block, v] strip tile
+    flat = x_ref[...].reshape(c_block, b * h * w)
+    fidx = (bc * h + ihc) * w + iwc  # [v]
+    vals = jnp.take(flat, fidx, axis=1)  # [c_block, v]
+    o_ref[0] = jnp.where(valid[None, :], vals, 0).astype(o_ref.dtype)
+
+
+def _choose_c_block(c: int, cap: int = 32) -> int:
+    """Largest divisor of C no bigger than ``cap`` (grid-coarsening factor)."""
+    for cb in range(min(c, cap), 0, -1):
+        if c % cb == 0:
+            return cb
+    return 1
 
 
 def im2col_pack_pallas(
@@ -79,18 +110,21 @@ def im2col_pack_pallas(
     wo = out_size(w, kw, stride, pad)
     n_pos = b * ho * wo
     n_strips = -(-n_pos // v)
+    c_block = _choose_c_block(c)
+    n_cb = c // c_block
 
-    grid = (n_strips, kh * kw, c)
+    grid = (n_strips, kh * kw, n_cb)
     out = pl.pallas_call(
         functools.partial(
-            _kernel, kh=kh, kw=kw, stride=stride, pad=pad, v=v, b=b, h=h, w=w, ho=ho, wo=wo
+            _kernel, kh=kh, kw=kw, stride=stride, pad=pad, v=v,
+            c_block=c_block, b=b, h=h, w=w, ho=ho, wo=wo
         ),
         grid=grid,
         in_specs=[
-            pl.BlockSpec((1, b, h, w), lambda s, k, cc: (cc, 0, 0, 0)),
+            pl.BlockSpec((c_block, b, h, w), lambda s, k, cc: (cc, 0, 0, 0)),
         ],
         out_specs=pl.BlockSpec(
-            (1, 1, v), lambda s, k, cc, _c=c: (s, k * _c + cc, 0)
+            (1, c_block, v), lambda s, k, cc, _n=n_cb: (s, k * _n + cc, 0)
         ),
         out_shape=jax.ShapeDtypeStruct((n_strips, kh * kw * c, v), x.dtype),
         compiler_params=_COMPILER_PARAMS(

@@ -8,17 +8,14 @@ import jax.numpy as jnp
 
 from repro.kernels.im2col_pack.kernel import im2col_pack_pallas
 from repro.kernels.im2col_pack.ref import im2col_cnhw, im2col_pack_ref, pack_strips
-
-
-def _should_interpret() -> bool:
-    return jax.default_backend() != "tpu"
+from repro.kernels.pltpu_compat import should_interpret
 
 
 @functools.partial(jax.jit, static_argnames=("kh", "kw", "stride", "pad", "v"))
 def im2col_pack(x, *, kh, kw, stride=1, pad=0, v=128):
     """Fused single-pass im2col + packing (the paper's optimization)."""
     return im2col_pack_pallas(
-        x, kh, kw, stride=stride, pad=pad, v=v, interpret=_should_interpret()
+        x, kh, kw, stride=stride, pad=pad, v=v, interpret=should_interpret()
     )
 
 

@@ -1,8 +1,30 @@
-"""Shared Pallas-TPU API compatibility shims for the kernel modules.
+"""Shared Pallas-TPU API compatibility shims + helpers for the kernel modules.
 
 jax renamed ``TPUCompilerParams`` -> ``CompilerParams`` across 0.4.x/0.5.x;
 accept either so the kernels run on whatever toolchain the image bakes in.
 """
+import jax
+import jax.numpy as jnp
 from jax.experimental.pallas import tpu as pltpu
 
 COMPILER_PARAMS = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+
+
+def dot_f32(a, b, interpret: bool):
+    """MXU dot with float32 accumulation, shared by every accumulate-flush
+    kernel.  Interpret mode casts the operands up first — XLA:CPU has no
+    bf16xbf16->f32 dot, while the TPU path feeds the MXU native operands."""
+    if interpret:
+        a = a.astype(jnp.float32)
+        b = b.astype(jnp.float32)
+    return jnp.dot(a, b, preferred_element_type=jnp.float32)
+
+
+def should_interpret() -> bool:
+    """One interpret-mode policy for every kernel wrapper: compiled Mosaic on
+    TPU, interpret mode everywhere else."""
+    return jax.default_backend() != "tpu"
+
+
+def ceil_to(x: int, m: int) -> int:
+    return (x + m - 1) // m * m

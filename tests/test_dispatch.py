@@ -63,13 +63,28 @@ class TestRegistry:
     def test_conv_candidates_registered(self):
         names = {s.name for s in REGISTRY.candidates("conv")}
         assert {"dense_conv", "im2col_dense_gemm", "im2col_sparse_xla",
-                "im2col_sparse_pallas"} <= names
+                "im2col_sparse_pallas", "fused_sparse_pallas"} <= names
+
+    def test_geometry_variants_registered(self):
+        # block geometry lives in the candidate space: one candidate per
+        # geometry grid point, default geometry keeping the bare family name
+        linear = {s.name for s in REGISTRY.candidates("linear")}
+        assert "compressed_pallas" in linear
+        assert any(n.startswith("compressed_pallas@") for n in linear)
+        conv = {s.name for s in REGISTRY.candidates("conv")}
+        assert any(n.startswith("fused_sparse_pallas@") for n in conv)
+        for s in REGISTRY.candidates("linear"):
+            if s.name.startswith("compressed_pallas"):
+                assert s.geom("bb") > 0 and s.geom("bk") > 0
 
     def test_param_keys_filter(self):
-        # a compressed layer can only execute compressed candidates
+        # a compressed layer can only execute compressed candidates; the
+        # pallas family contributes one candidate per geometry point
         names = {s.name for s in
                  REGISTRY.candidates("linear", param_keys=("values", "idx"))}
-        assert names == {"compressed_xla", "compressed_pallas"}
+        assert {n.split("@")[0] for n in names} == {
+            "compressed_xla", "compressed_pallas"}
+        assert "compressed_pallas" in names
 
     def test_masked_layer_never_resolves_dense(self):
         # dense (requires {w}) is a strict-subset match for {w, mask} but
