@@ -17,3 +17,25 @@ python -m benchmarks.run --quick
 
 echo "== conv megakernel smoke (writes BENCH_conv.json) =="
 python -m benchmarks.bench_conv_fused --quick --json
+
+echo "== banded conv smoke (forced double-buffered DMA path) =="
+REPRO_DISPATCH_FORCE=fused_banded_pallas python - <<'PY'
+import sys
+import jax, jax.numpy as jnp, numpy as np
+from repro.core import SparsityConfig, conv_init, conv_apply, unbox_tree
+from repro.kernels.pltpu_compat import HAS_ASYNC_COPY
+
+if not HAS_ASYNC_COPY:  # same gate as the banded dispatch predicates
+    print("banded DMA smoke SKIPPED: pallas build has no make_async_copy")
+    sys.exit(0)
+cfg = SparsityConfig(sparsity=0.5, m=None, tile=8, min_dim=8,
+                     format="compressed_pallas")
+params, _ = unbox_tree(conv_init(jax.random.PRNGKey(0), 8, 16, 3, 3, cfg))
+x = jax.random.normal(jax.random.PRNGKey(1), (8, 2, 10, 10))
+y = conv_apply(params, x, kh=3, kw=3, stride=1, pad=1)      # forced banded
+y_ref = conv_apply(params, x, kh=3, kw=3, stride=1, pad=1,
+                   impl="im2col_sparse_xla")
+np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                           rtol=1e-4, atol=1e-4)
+print("banded DMA smoke OK:", y.shape)
+PY

@@ -1,4 +1,5 @@
-"""Config registry: the 10 assigned architectures + reduced smoke variants."""
+"""Config registry: the 10 assigned LM architectures + reduced smoke
+variants, plus the vision configs that exercise the pruned-conv path."""
 from __future__ import annotations
 
 import importlib
@@ -9,6 +10,7 @@ from repro.configs.base import (  # noqa: F401
     SHAPES,
     ModelConfig,
     ShapeCell,
+    VisionConfig,
 )
 
 _MODULES = {
@@ -25,14 +27,33 @@ _MODULES = {
 }
 
 
+# Vision archs live in their own registry: they are VisionConfig (conv
+# stacks), not ModelConfig, and the LM smoke/dry-run harnesses that iterate
+# list_archs() cannot build them.
+_VISION_MODULES = {
+    "resnet-tiny": "repro.configs.resnet_tiny",
+}
+
+
 def list_archs() -> List[str]:
     return list(_MODULES)
+
+
+def list_vision_archs() -> List[str]:
+    return list(_VISION_MODULES)
 
 
 def get_config(name: str) -> ModelConfig:
     if name not in _MODULES:
         raise KeyError(f"unknown arch {name!r}; known: {list(_MODULES)}")
     return importlib.import_module(_MODULES[name]).CONFIG
+
+
+def get_vision_config(name: str) -> VisionConfig:
+    if name not in _VISION_MODULES:
+        raise KeyError(
+            f"unknown vision arch {name!r}; known: {list(_VISION_MODULES)}")
+    return importlib.import_module(_VISION_MODULES[name]).CONFIG
 
 
 def smoke_config(name: str) -> ModelConfig:

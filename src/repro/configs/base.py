@@ -129,6 +129,36 @@ class ModelConfig:
 
 
 @dataclasses.dataclass(frozen=True)
+class VisionConfig:
+    """Architecture config for the conv/vision side of the zoo.
+
+    Small ResNet-style stacks of basic blocks built entirely on
+    ``conv_init``/``conv_apply`` (``repro.models.vision``), so the paper's
+    column-wise N:M pruning — and the profiled conv execution-plan ladder
+    behind it (VMEM-resident / banded / pipelined / XLA) — is exercised
+    end-to-end by a zoo config, exactly as the LM configs exercise the
+    linear path.
+    """
+
+    name: str = "vision"
+    family: str = "vision"
+    c_in: int = 3
+    stem_channels: int = 16
+    stage_channels: Tuple[int, ...] = (16, 32)
+    stage_blocks: Tuple[int, ...] = (1, 1)
+    stage_strides: Tuple[int, ...] = (1, 2)
+    image_hw: Tuple[int, int] = (32, 32)
+    num_classes: int = 10
+    strip_v: int = 128                     # packed-strip width for conv keys
+    sparsity: SparsityConfig = DENSE
+    dtype: str = "float32"
+    source: str = ""
+
+    def with_(self, **kw) -> "VisionConfig":
+        return dataclasses.replace(self, **kw)
+
+
+@dataclasses.dataclass(frozen=True)
 class ShapeCell:
     """One (input-shape) cell of the assignment grid."""
 

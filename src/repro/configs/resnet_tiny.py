@@ -1,0 +1,24 @@
+"""resnet-tiny: the smallest vision config that exercises the pruned-conv
+dispatch path end-to-end (stem + two stages of ResNet basic blocks + linear
+head, every conv a ``conv_init`` layer at 50% column-wise sparsity).
+
+Channel widths are sized so the pruned convs clear ``min_dim`` (the 3-channel
+stem and the 1x1 projections stay dense, as the paper leaves its stem
+unpruned) while staying cheap enough for interpret-mode Pallas on CPU."""
+from repro.configs.base import VisionConfig
+from repro.core.pruning import SparsityConfig
+
+CONFIG = VisionConfig(
+    name="resnet-tiny",
+    c_in=3,
+    stem_channels=8,
+    stage_channels=(16, 16),
+    stage_blocks=(1, 1),
+    stage_strides=(1, 2),
+    image_hw=(16, 16),
+    num_classes=10,
+    strip_v=128,
+    sparsity=SparsityConfig(sparsity=0.5, m=None, tile=8, min_dim=16,
+                            format="compressed_pallas"),
+    source="ResNet-18 basic-block family, reduced for CPU smoke",
+)

@@ -55,6 +55,13 @@ def conv_init(
         values, idx = formats.init_compressed(key, d_in, c_out, cfg, dtype, scale)
         params["values"] = Boxed(values, ("tile", "kept", None))
         params["idx"] = Boxed(idx, ("tile", None))
+        # op discriminator: a compressed conv layer's (values, idx) pair is
+        # shape-indistinguishable from a linear layer's, so the build-time
+        # params scan (dispatch.plan_params) needs this marker to pre-profile
+        # it under a conv_key instead of misfiling it as a linear op.  It is
+        # a replicated int leaf (jit/sharding-safe); apply/compress ignore it.
+        params["conv_geom"] = Boxed(
+            jnp.asarray([kh, kw, c_in], jnp.int32), (None,))
     else:
         if scale is None:
             scale = 1.0 / np.sqrt(d_in)
@@ -131,7 +138,8 @@ def compress_conv_layer(params, kh: int, kw: int, cfg: SparsityConfig):
     w = params["w"]
     w = w.value if isinstance(w, Boxed) else w
     values, idx, _meta = compress_conv_weights(w, cfg)
-    out = {"values": values, "idx": idx}
+    out = {"values": values, "idx": idx,
+           "conv_geom": jnp.asarray([kh, kw, w.shape[3]], jnp.int32)}
     if "b" in params:
         b = params["b"]
         out["b"] = b.value if isinstance(b, Boxed) else b

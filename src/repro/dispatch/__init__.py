@@ -3,6 +3,7 @@
 # races the feasible ones, a fingerprinted persistent profile DB, and the
 # best_impl() selection layer every sparse call site consults.
 from repro.dispatch.registry import (  # noqa: F401
+    BANDED_CONV_GEOMETRY,
     FUSED_CONV_GEOMETRY,
     LINEAR_GEOMETRY,
     REGISTRY,
@@ -35,6 +36,7 @@ from repro.dispatch.dispatch import (  # noqa: F401
     ensure_profiled,
     get_db,
     iter_compressed_layers,
+    iter_op_layers,
     linear_impl,
     phase_scope,
     plan_params,

@@ -32,6 +32,7 @@ from repro.dispatch.registry import (
     REGISTRY,
     ImplSpec,
     OpKey,
+    conv_key,
     linear_key,
     linear_key_from,
 )
@@ -229,24 +230,65 @@ def linear_impl(x_shape, values_shape, dtype="float32", *,
 def iter_compressed_layers(tree, prefix: str = ""):
     """Yield (path, values, idx) for every compressed layer in a params tree
     (plain dicts or ``Boxed`` leaves; scan-stacked leading dims allowed)."""
+    for path, _op, info in iter_op_layers(tree, prefix):
+        yield path, info["values"], info["idx"]
+
+
+def iter_op_layers(tree, prefix: str = ""):
+    """Yield (path, op, info) for every dispatchable compressed layer in a
+    params tree (plain dicts or ``Boxed`` leaves; scan-stacked leading dims
+    allowed).
+
+    ``op`` is the layer's operator kind: ``"conv"`` when the dict carries the
+    ``conv_init`` discriminator (a ``conv_geom`` [kh, kw, c_in] leaf — the
+    pair (values, idx) alone is shape-indistinguishable from a linear layer),
+    else ``"linear"``.  ``info`` always has ``values``/``idx``; conv layers
+    add static ``kh``/``kw``/``c_in`` ints read off the marker.
+    """
     def unval(v):
         return getattr(v, "value", v)
 
     if isinstance(tree, dict):
         if "values" in tree and "idx" in tree:
-            yield prefix or ".", unval(tree["values"]), unval(tree["idx"])
+            info = {"values": unval(tree["values"]), "idx": unval(tree["idx"])}
+            if "conv_geom" in tree:
+                import numpy as np
+
+                # scan-stacked layers carry a stacked [L, 3] marker; the
+                # statics are identical across the stack, so read layer 0
+                geom = np.asarray(unval(tree["conv_geom"])).reshape(-1, 3)[0]
+                info["kh"], info["kw"] = int(geom[0]), int(geom[1])
+                info["c_in"] = int(geom[2])
+                yield prefix or ".", "conv", info
+            else:
+                yield prefix or ".", "linear", info
         for k, v in tree.items():
-            if k in ("values", "idx"):
+            if k in ("values", "idx", "conv_geom"):
                 continue
-            yield from iter_compressed_layers(v, f"{prefix}/{k}" if prefix else str(k))
+            yield from iter_op_layers(v, f"{prefix}/{k}" if prefix else str(k))
     elif isinstance(tree, (list, tuple)):
         for i, v in enumerate(tree):
-            yield from iter_compressed_layers(v, f"{prefix}[{i}]")
+            yield from iter_op_layers(v, f"{prefix}[{i}]")
+
+
+def _match_conv_hint(conv_hints: Optional[Mapping[str, Mapping[str, int]]],
+                     path: str) -> Optional[Mapping[str, int]]:
+    """Most-specific (longest) hint whose key is a substring of ``path``;
+    the empty-string key is the catch-all default."""
+    if not conv_hints:
+        return None
+    best = None
+    for pat, hint in conv_hints.items():
+        if pat in path and (best is None or len(pat) > len(best[0])):
+            best = (pat, hint)
+    return best[1] if best else None
 
 
 def plan_params(params, *, batch_hint: int = 8, db: Optional[ProfileDB] = None,
                 profile: Optional[bool] = None,
-                phase_hints: Optional[Mapping[str, int]] = None) -> Dict[str, str]:
+                phase_hints: Optional[Mapping[str, int]] = None,
+                conv_hints: Optional[Mapping[str, Mapping[str, int]]] = None,
+                ) -> Dict[str, str]:
     """Build-time dispatch plan for a model's params tree.
 
     Scans for compressed layers, resolves (and optionally profiles) the
@@ -261,13 +303,18 @@ def plan_params(params, *, batch_hint: int = 8, db: Optional[ProfileDB] = None,
     per-phase implementations.  Without it the single ``batch_hint`` plans
     phase-agnostic keys exactly as before.
 
-    Known limitation: the scan assumes every (values, idx) pair is a linear
-    layer.  ``conv_init`` params share that shape, so a tree containing conv
-    layers gets them planned under (harmless but useless) linear tokens while
-    the conv_key tokens ``conv_apply`` looks up stay cold — conv profiling
-    happens lazily at the call site for now.  Wiring conv-aware planning in
-    is part of the "vision configs through conv_apply" ROADMAP item (the
-    params tree needs an op discriminator first).
+    Conv layers (tagged by ``conv_init``'s ``conv_geom`` discriminator — see
+    :func:`iter_op_layers`) are planned under ``conv_key`` tokens, NOT
+    misfiled as linear ops.  A conv OpKey needs the input-map shape, which is
+    a call-time property, so ``conv_hints`` supplies it: a mapping from
+    layer-path substring to ``{"h", "w", "batch", "stride", "pad", "v"}``
+    (``w`` defaults to ``h``, ``stride`` to 1, ``pad`` to "same" = kh//2,
+    ``batch`` to 1, ``v`` to 128); the longest matching key wins and ``""``
+    is the catch-all.  Vision configs generate exact per-layer hints —
+    ``repro.models.vision.conv_hints`` — so the planned tokens are identical
+    to the ones ``conv_apply`` resolves at trace time.  Conv layers without a
+    matching hint are skipped (their profiling happens lazily at the call
+    site); conv tokens are planned phase-agnostic.
     """
     if not dispatch_enabled():
         # legacy fixed routing ignores the plan; skip the tree walk and the
@@ -278,8 +325,35 @@ def plan_params(params, *, batch_hint: int = 8, db: Optional[ProfileDB] = None,
     the_db = db if db is not None else get_db()
     hints: Mapping[str, int] = phase_hints if phase_hints else {"": batch_hint}
     plan: Dict[str, str] = {}
-    for _path, values, idx in iter_compressed_layers(params):
+
+    def _plan_key(key: OpKey) -> None:
+        if key.token in plan:
+            return
+        if profile and key.token not in the_db:
+            try:
+                ensure_profiled(key, param_keys=("values", "idx"), db=the_db)
+            except TuningError:
+                pass
+        plan[key.token] = best_impl(
+            key, param_keys=("values", "idx"), db=the_db).name
+
+    for path, op, info in iter_op_layers(params):
+        values, idx = info["values"], info["idx"]
         n_tiles, k_kept, tile = (int(s) for s in values.shape[-3:])
+        dtype = getattr(values, "dtype", "float32")
+        if op == "conv":
+            hint = _match_conv_hint(conv_hints, path)
+            if hint is None:
+                continue  # no map-shape hint: cannot form the conv token
+            kh, kw, c = info["kh"], info["kw"], info["c_in"]
+            h = int(hint["h"])
+            key = conv_key(
+                c, h, int(hint.get("w", h)), n_tiles * tile, kh, kw,
+                int(hint.get("stride", 1)), int(hint.get("pad", kh // 2)),
+                k_kept, tile, v=int(hint.get("v", 128)), dtype=dtype,
+                batch=int(hint.get("batch", 1)))
+            _plan_key(key)
+            continue
         # d_in is not stored in the compressed layout; the max kept index
         # bounds it from below, and OpKey buckets d_in to a power of two, so
         # this lands in the trace-time token whenever the kept support
@@ -289,17 +363,6 @@ def plan_params(params, *, batch_hint: int = 8, db: Optional[ProfileDB] = None,
         # heuristic — a missed warm-up, never a wrong result.
         d_in = int(idx.max()) + 1 if getattr(idx, "size", 0) else k_kept
         for ph, rows in hints.items():
-            key = linear_key(rows, d_in, n_tiles * tile, k_kept, tile,
-                             dtype=getattr(values, "dtype", "float32"),
-                             phase=ph)
-            if key.token in plan:
-                continue
-            if profile and key.token not in the_db:
-                try:
-                    ensure_profiled(key, param_keys=("values", "idx"),
-                                    db=the_db)
-                except TuningError:
-                    pass
-            plan[key.token] = best_impl(
-                key, param_keys=("values", "idx"), db=the_db).name
+            _plan_key(linear_key(rows, d_in, n_tiles * tile, k_kept, tile,
+                                 dtype=dtype, phase=ph))
     return plan

@@ -259,6 +259,16 @@ FUSED_CONV_GEOMETRY = (
     (("v", 256), ("bk", 128)),
     (("v", 128), ("bk", 64)),
 )
+# Banded/pipelined conv plans: strip width x block_k x band depth ``hb``
+# (strips per double-buffered DMA — row band for the banded megakernel,
+# strip chunk for the pipelined two-kernel GEMM).  Shallow bands minimize
+# VMEM, deep bands amortize DMA issue overhead; the profiler picks.
+BANDED_CONV_GEOMETRY = (
+    (("v", 128), ("bk", 128), ("hb", 2)),
+    (("v", 256), ("bk", 128), ("hb", 2)),
+    (("v", 128), ("bk", 128), ("hb", 4)),
+    (("v", 128), ("bk", 64), ("hb", 1)),
+)
 
 
 def _key_itemsize(key: OpKey) -> int:
@@ -592,6 +602,89 @@ REGISTRY.register(ImplSpec(
     make_bench=lambda key: _bench_conv(key, _apply_conv_two_kernel),
 ))
 
+def _apply_conv_banded(params, x, *, kh, kw, stride=1, pad=0, v=128,
+                       geom_v=128, geom_bk=128, geom_hb=2):
+    # like the resident megakernel, the banded kernel's strips never exist in
+    # HBM — strip width and band depth are pure execution geometry
+    from repro.kernels.conv_gemm.ops import conv2d_fused_banded
+
+    return conv2d_fused_banded(x, params["values"], params["idx"], kh=kh,
+                               kw=kw, stride=stride, pad=pad, v=geom_v,
+                               block_k=geom_bk, hb=geom_hb)
+
+
+def _apply_conv_pipelined(params, x, *, kh, kw, stride=1, pad=0, v=128,
+                          geom_v=128, geom_bk=128, geom_hb=2):
+    # the pipelined plan writes and reads its own strips, so the profiled
+    # strip width applies to both kernels of the pair
+    from repro.kernels.conv_gemm.ops import conv2d_two_kernel_pipelined
+
+    return conv2d_two_kernel_pipelined(x, params["values"], params["idx"],
+                                       kh=kh, kw=kw, stride=stride, pad=pad,
+                                       v=geom_v, block_k=geom_bk, hb=geom_hb)
+
+
+def _conv_hw(key: OpKey):
+    """(c, b, h, w, ho, wo) of a conv key (ho/wo recomputed from extras)."""
+    from repro.kernels.im2col_pack.ref import out_size
+
+    c, h = key.get("c"), key.get("h")
+    w = key.get("w", h)
+    b = max(key.get("b", 1), 1)
+    ho = out_size(h, key.get("kh"), key.get("s", 1), key.get("p", 0))
+    wo = out_size(w, key.get("kw"), key.get("s", 1), key.get("p", 0))
+    return c, b, h, w, ho, wo
+
+
+def _banded_vmem_for(geom_v: int, geom_bk: int, geom_hb: int):
+    def vm(key: OpKey) -> int:
+        from repro.kernels.conv_gemm.kernel import band_plan, banded_vmem_bytes
+
+        c, b, h, w, ho, wo = _conv_hw(key)
+        _, band_rows = band_plan(b=b, h=h, kh=key.get("kh"),
+                                 stride=key.get("s", 1), pad=key.get("p", 0),
+                                 ho=ho, wo=wo, v=geom_v, hb=geom_hb)
+        return banded_vmem_bytes(c, w, band_rows, geom_v,
+                                 min(geom_bk, key.k_kept), min(key.tile, 512),
+                                 in_bytes=_key_itemsize(key))
+
+    return vm
+
+
+def _dma_conv_feasible_for(vm_fn):
+    """Predicate factory shared by the manual-DMA conv plans: tile shape,
+    conv extras present, an async-copy-capable pallas build, and the
+    double-buffered footprint within budget."""
+
+    def feasible(key: OpKey) -> Tuple[bool, str]:
+        from repro.kernels.pltpu_compat import HAS_ASYNC_COPY
+
+        ok, reason = _tile_ok(key)
+        if not ok:
+            return ok, reason
+        if key.get("c") <= 0 or key.get("h") <= 0:
+            return False, "conv geometry (c, h, w) missing from key extras"
+        if not HAS_ASYNC_COPY:
+            return False, "pallas build has no make_async_copy"
+        vm = vm_fn(key)
+        if vm > VMEM_BYTES:
+            return False, f"VMEM {vm} > budget {VMEM_BYTES}"
+        return True, "ok"
+
+    return feasible
+
+
+def _pipelined_vmem_for(geom_v: int, geom_bk: int, geom_hb: int):
+    def vm(key: OpKey) -> int:
+        from repro.kernels.colwise_nm.kernel import pipelined_strips_vmem_bytes
+
+        return pipelined_strips_vmem_bytes(
+            key.d_in, geom_v, geom_hb, min(geom_bk, key.k_kept),
+            min(key.tile, 512), in_bytes=_key_itemsize(key))
+
+    return vm
+
+
 # fused megakernel: one geometry-pinned candidate per (strip width, block_k)
 for _geom in FUSED_CONV_GEOMETRY:
     _gv, _gbk = dict(_geom)["v"], dict(_geom)["bk"]
@@ -607,3 +700,29 @@ for _geom in FUSED_CONV_GEOMETRY:
         make_bench=functools.partial(_bench_conv, apply_fn=_apply),
         geometry=_geom,
     ))
+
+# The banded megakernel and pipelined two-kernel plans: the next rungs of the
+# conv plan ladder (VMEM-resident -> banded -> pipelined two-kernel -> XLA;
+# see docs/kernels.md).  Both are geometry-parameterized over strip width x
+# block_k x band depth, with dtype-aware predicates that account for the
+# DOUBLE buffers their DMA pipelines keep resident.
+for _family, _apply_fn, _vm_for, _prio in (
+        ("fused_banded_pallas", _apply_conv_banded, _banded_vmem_for, 6),
+        ("two_kernel_pipelined", _apply_conv_pipelined, _pipelined_vmem_for,
+         8)):
+    for _geom in BANDED_CONV_GEOMETRY:
+        _gv, _gbk, _ghb = (dict(_geom)["v"], dict(_geom)["bk"],
+                           dict(_geom)["hb"])
+        _apply = functools.partial(_apply_fn, geom_v=_gv, geom_bk=_gbk,
+                                   geom_hb=_ghb)
+        _vm = _vm_for(_gv, _gbk, _ghb)
+        REGISTRY.register(ImplSpec(
+            name=geometry_name(_family, _geom, BANDED_CONV_GEOMETRY[0]),
+            op="conv", backend="pallas",
+            requires=frozenset({"values", "idx"}), priority=_prio,
+            feasible=_dma_conv_feasible_for(_vm),
+            vmem_bytes=_vm,
+            apply=_apply,
+            make_bench=functools.partial(_bench_conv, apply_fn=_apply),
+            geometry=_geom,
+        ))

@@ -1,11 +1,14 @@
 from repro.kernels.colwise_nm.kernel import (  # noqa: F401
     colwise_nm_matmul_pallas,
     colwise_nm_matmul_strips_pallas,
+    colwise_nm_matmul_strips_pipelined_pallas,
+    pipelined_strips_vmem_bytes,
     strips_vmem_bytes,
     vmem_bytes,
 )
 from repro.kernels.colwise_nm.ops import (  # noqa: F401
     colwise_nm_matmul,
     colwise_nm_matmul_strips,
+    colwise_nm_matmul_strips_pipelined,
 )
 from repro.kernels.colwise_nm.ref import colwise_nm_matmul_ref  # noqa: F401

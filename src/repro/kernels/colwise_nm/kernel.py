@@ -31,7 +31,14 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels.pltpu_compat import COMPILER_PARAMS as _COMPILER_PARAMS
-from repro.kernels.pltpu_compat import ceil_to, dot_f32
+from repro.kernels.pltpu_compat import (
+    MEM_ANY,
+    ceil_to,
+    dma_semaphores,
+    dot_f32,
+    double_buffer_rotate,
+    make_async_copy,
+)
 
 
 def _kernel(x_ref, idx_ref, v_ref, o_ref, acc_ref, *, n_kc: int, out_dtype, interpret: bool):
@@ -191,6 +198,137 @@ def strips_vmem_bytes(d_in: int, v: int, block_k: int, tile: int,
     acc = tile * v * 4
     out = tile * v * in_bytes
     return strip + x_sel + v_blk + acc + out
+
+
+# ---------------------------------------------------------------------------
+# Pipelined strip-major entry: strips stay in HBM, chunks of ``hb`` strips
+# are double-buffered into VMEM scratch — the copy of chunk g+1 overlaps the
+# GEMM of chunk g, removing the pack->GEMM back-to-back serialization of the
+# two-kernel conv plan.
+# ---------------------------------------------------------------------------
+
+
+def _strips_pipelined_kernel(
+    x_ref,        # [n_strips, K, V] packed strips, NOT block-mapped (HBM)
+    idx_ref,
+    v_ref,
+    o_ref,
+    buf_ref,      # [2*hb, K, V] double-buffered strip-chunk scratch
+    sem_ref,      # [2] DMA completion semaphores
+    acc_ref,
+    *,
+    hb: int,
+    n_chunks: int,
+    n_strips: int,
+    n_kc: int,
+    out_dtype,
+    interpret: bool,
+):
+    s = pl.program_id(0)
+    t = pl.program_id(1)
+    kc = pl.program_id(2)
+    g = s // hb
+
+    def origin(gi):
+        # fixed-size chunks: the final (ragged) chunk re-covers the tail of
+        # the previous one instead of reading past the strip array
+        return jnp.minimum(gi * hb, n_strips - hb)
+
+    def chunk_dma(slot, gi):
+        return make_async_copy(
+            x_ref.at[pl.ds(origin(gi), hb)],
+            buf_ref.at[pl.ds(slot * hb, hb)],
+            sem_ref.at[slot],
+        )
+
+    double_buffer_rotate(chunk_dma, g, n_chunks,
+                         gate=(s % hb == 0) & (t == 0) & (kc == 0))
+
+    @pl.when(kc == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    ids = idx_ref[0]
+    x_blk = buf_ref[(g % 2) * hb + (s - origin(g))]  # [K, V], VMEM resident
+    x_sel = jnp.take(x_blk, ids, axis=0)  # [block_k, V]
+    acc_ref[...] += dot_f32(v_ref[0].T, x_sel, interpret)  # [tile, V]
+
+    @pl.when(kc == n_kc - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(out_dtype)
+
+
+def colwise_nm_matmul_strips_pipelined_pallas(
+    strips: jax.Array,
+    values: jax.Array,
+    idx: jax.Array,
+    *,
+    block_k: int = 128,
+    hb: int = 2,
+    interpret: bool = False,
+) -> jax.Array:
+    """Double-buffered strip-major sparse GEMM: [n_strips, K, V] -> [O, S*V].
+
+    Same contract as :func:`colwise_nm_matmul_strips_pallas`, but the strips
+    array is NOT pipelined block-by-block by Pallas: it stays in HBM and the
+    kernel DMAs chunks of ``hb`` strips into a two-slot VMEM scratch, always
+    copying chunk g+1 while the GEMM consumes chunk g.
+    """
+    n_strips, d_in, v = strips.shape
+    n_tiles, k_kept, tile = values.shape
+    assert idx.shape == (n_tiles, k_kept), (idx.shape, values.shape)
+
+    hb = max(min(hb, n_strips), 1)
+    n_chunks = -(-n_strips // hb)
+
+    block_k = min(block_k, ceil_to(k_kept, 8))
+    k_pad = ceil_to(k_kept, block_k)
+    if k_pad != k_kept:
+        values = jnp.pad(values, ((0, 0), (0, k_pad - k_kept), (0, 0)))
+        idx = jnp.pad(idx, ((0, 0), (0, k_pad - k_kept)))
+    n_kc = k_pad // block_k
+
+    grid = (n_strips, n_tiles, n_kc)
+    out = pl.pallas_call(
+        functools.partial(
+            _strips_pipelined_kernel, hb=hb, n_chunks=n_chunks,
+            n_strips=n_strips, n_kc=n_kc, out_dtype=strips.dtype,
+            interpret=interpret),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=MEM_ANY),  # strips stay in HBM
+            pl.BlockSpec((1, block_k), lambda s, t, kc: (t, kc)),
+            pl.BlockSpec((1, block_k, tile), lambda s, t, kc: (t, kc, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile, v), lambda s, t, kc: (t, s)),
+        out_shape=jax.ShapeDtypeStruct((n_tiles * tile, n_strips * v),
+                                       strips.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((2 * hb, d_in, v), strips.dtype),
+            dma_semaphores(2),
+            pltpu.VMEM((tile, v), jnp.float32),
+        ],
+        compiler_params=_COMPILER_PARAMS(
+            # strips advance sequentially: the double-buffer rotation assumes
+            # chunk g's steps complete before chunk g+1's begin
+            dimension_semantics=("arbitrary", "arbitrary", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(strips, idx, values)
+    return out
+
+
+def pipelined_strips_vmem_bytes(d_in: int, v: int, hb: int, block_k: int,
+                                tile: int, in_bytes: int = 2) -> int:
+    """Analytic VMEM footprint of one pipelined strip-GEMM grid step: TWO
+    chunks of ``hb`` strips (double buffer) plus the gather/weight/acc/out
+    tiles of the plain strip-major kernel."""
+    chunks = 2 * hb * d_in * v * in_bytes
+    x_sel = block_k * v * in_bytes
+    v_blk = block_k * tile * in_bytes
+    acc = tile * v * 4
+    out = tile * v * in_bytes
+    return chunks + x_sel + v_blk + acc + out
 
 
 def vmem_bytes(block_b: int, block_k: int, d_in: int, tile: int, in_bytes: int = 2) -> int:

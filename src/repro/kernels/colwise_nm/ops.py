@@ -15,6 +15,7 @@ import jax.numpy as jnp
 from repro.kernels.colwise_nm.kernel import (
     colwise_nm_matmul_pallas,
     colwise_nm_matmul_strips_pallas,
+    colwise_nm_matmul_strips_pipelined_pallas,
 )
 from repro.kernels.pltpu_compat import should_interpret
 
@@ -30,6 +31,19 @@ def colwise_nm_matmul_strips(strips, values, idx, *, block_k: int = 128):
     """
     return colwise_nm_matmul_strips_pallas(
         strips, values, idx, block_k=block_k, interpret=should_interpret()
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("block_k", "hb"))
+def colwise_nm_matmul_strips_pipelined(strips, values, idx, *,
+                                       block_k: int = 128, hb: int = 2):
+    """Double-buffered strip-major sparse GEMM (same contract as
+    :func:`colwise_nm_matmul_strips`): strips stay in HBM and chunks of
+    ``hb`` strips are async-copied into VMEM while the previous chunk's GEMM
+    runs — the overlapped half of the pipelined two-kernel conv plan."""
+    return colwise_nm_matmul_strips_pipelined_pallas(
+        strips, values, idx, block_k=block_k, hb=hb,
+        interpret=should_interpret()
     )
 
 

@@ -1,12 +1,18 @@
 from repro.kernels.conv_gemm.kernel import (  # noqa: F401
+    band_plan,
+    banded_vmem_bytes,
+    conv2d_fused_banded_pallas,
     conv2d_fused_pallas,
     fused_vmem_bytes,
 )
 from repro.kernels.conv_gemm.ops import (  # noqa: F401
+    banded_bytes_moved,
     compress_conv_weights,
     conv2d_colwise_sparse,
     conv2d_fused,
+    conv2d_fused_banded,
     conv2d_two_kernel,
+    conv2d_two_kernel_pipelined,
     conv2d_xla_ref,
 )
 from repro.kernels.conv_gemm.ref import conv2d_cnhw_ref  # noqa: F401

@@ -32,7 +32,14 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels.pltpu_compat import COMPILER_PARAMS as _COMPILER_PARAMS
-from repro.kernels.pltpu_compat import ceil_to, dot_f32
+from repro.kernels.pltpu_compat import (
+    MEM_ANY,
+    ceil_to,
+    dma_semaphores,
+    dot_f32,
+    double_buffer_rotate,
+    make_async_copy,
+)
 
 from repro.kernels.im2col_pack.kernel import strip_tap_coords
 from repro.kernels.im2col_pack.ref import out_size
@@ -160,3 +167,219 @@ def fused_vmem_bytes(c: int, b: int, h: int, w: int, v: int, block_k: int,
     acc = tile * v * 4
     out = tile * v * in_bytes
     return fmap + patch + v_blk + acc + out
+
+
+# ---------------------------------------------------------------------------
+# Banded megakernel: H-tiled variant — only a row band of the map is resident
+# ---------------------------------------------------------------------------
+
+
+def band_plan(*, b: int, h: int, kh: int, stride: int, pad: int, ho: int,
+              wo: int, v: int, hb: int):
+    """Static band geometry for the banded megakernel.
+
+    A *band* groups ``hb`` consecutive strips (``hb*v`` output positions).
+    In the flattened ``(batch*h)`` input-row space the rows a band's strips
+    read are contiguous (consecutive output positions advance monotonically
+    through ``bb*h + oh*stride``, including across batch boundaries), so each
+    band needs one contiguous row window of roughly
+    ``stride * ceil(hb*v / wo) + kh - 1`` rows (the strip rows plus the
+    kh-1 halo).  Returns ``(n_bands, band_rows)`` with ``band_rows`` the
+    exact maximum over bands (ragged final band included), clamped to the
+    full ``b*h`` — the static size of the double-buffered VMEM scratch.
+    """
+    n_pos = b * ho * wo
+    n_strips = -(-n_pos // v)
+    hb = max(min(hb, n_strips), 1)
+    n_bands = -(-n_strips // hb)
+    bh = b * h
+
+    def first_row(p):  # top input row touched by output position p (tap 0)
+        bb, rem = divmod(p, ho * wo)
+        return bb * h + (rem // wo) * stride - pad
+
+    rows = 1
+    for g in range(n_bands):
+        p0 = g * hb * v
+        p1 = min((g + 1) * hb * v, n_pos) - 1
+        r0 = max(first_row(p0), 0)
+        r1 = min(first_row(p1) + kh - 1, bh - 1)
+        rows = max(rows, r1 - r0 + 1)
+    return n_bands, min(rows, bh)
+
+
+def _band_origin(g, *, hb, v, h, ho, wo, pad, stride, bh, band_rows):
+    """First flattened (batch*h) input row of band ``g``'s scratch window —
+    the traced twin of ``band_plan``'s ``first_row``/clamp arithmetic (the
+    kernel recomputes it per band; the DMA start and wait descriptors must
+    agree exactly)."""
+    p0 = g * (hb * v)
+    bb0 = p0 // (ho * wo)
+    oh0 = (p0 % (ho * wo)) // wo
+    r0 = jnp.maximum(bb0 * h + oh0 * stride - pad, 0)
+    # clamp so the fixed-size window never reads past the map's last row; the
+    # window then starts *earlier* than needed, which only widens coverage
+    return jnp.minimum(r0, bh - band_rows)
+
+
+def _banded_kernel(
+    x_ref,        # [C, B*H, W] feature map, NOT block-mapped (HBM / ANY)
+    idx_ref,
+    v_ref,
+    o_ref,
+    band_ref,     # [2, C, band_rows, W] double-buffered row-band scratch
+    sem_ref,      # [2] DMA completion semaphores
+    acc_ref,
+    *,
+    kh: int,
+    kw: int,
+    stride: int,
+    pad: int,
+    v: int,
+    hb: int,
+    band_rows: int,
+    n_bands: int,
+    c: int,
+    b: int,
+    h: int,
+    w: int,
+    ho: int,
+    wo: int,
+    n_kc: int,
+    out_dtype,
+    interpret: bool,
+):
+    s = pl.program_id(0)
+    t = pl.program_id(1)
+    kc = pl.program_id(2)
+    g = s // hb
+    bh = b * h
+
+    def origin(gi):
+        return _band_origin(gi, hb=hb, v=v, h=h, ho=ho, wo=wo, pad=pad,
+                            stride=stride, bh=bh, band_rows=band_rows)
+
+    def band_dma(slot, gi):
+        return make_async_copy(
+            x_ref.at[:, pl.ds(origin(gi), band_rows), :],
+            band_ref.at[slot],
+            sem_ref.at[slot],
+        )
+
+    # Double buffering: at the first grid step of band g, kick off the DMA
+    # for band g+1, THEN block on band g's copy — band g+1's rows stream in
+    # while the (n_tiles * n_kc * hb-strip) GEMM steps of band g run.
+    double_buffer_rotate(band_dma, g, n_bands,
+                         gate=(s % hb == 0) & (t == 0) & (kc == 0))
+
+    @pl.when(kc == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    ids = idx_ref[0]  # [block_k] kept (kh, kw, c) row ids for this chunk
+    k_of = ids // c
+    c_of = ids % c
+    # band-local im2col coordinates: same index arithmetic as the resident
+    # megakernel, with rows rebased to this band's scratch window
+    org = origin(g)
+    valid, rowc, iwc = strip_tap_coords(
+        s, v=v, ikh=(k_of // kw)[:, None], ikw=(k_of % kw)[:, None],
+        stride=stride, pad=pad, b=b, h=h, w=w, ho=ho, wo=wo,
+        band_origin=org, band_rows=band_rows)
+    flat = band_ref[g % 2].reshape(c * band_rows * w)
+    fidx = (c_of[:, None] * band_rows + rowc) * w + iwc
+    patch = jnp.where(valid, jnp.take(flat, fidx), 0)  # [block_k, v]
+
+    acc_ref[...] += dot_f32(v_ref[0].T, patch, interpret)  # [tile, v]
+
+    @pl.when(kc == n_kc - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(out_dtype)
+
+
+def conv2d_fused_banded_pallas(
+    x: jax.Array,
+    values: jax.Array,
+    idx: jax.Array,
+    *,
+    kh: int,
+    kw: int,
+    stride: int = 1,
+    pad: int = 0,
+    v: int = 128,
+    block_k: int = 128,
+    hb: int = 2,
+    interpret: bool = False,
+) -> jax.Array:
+    """H-tiled fused conv: like :func:`conv2d_fused_pallas`, but the feature
+    map stays in HBM and only a double-buffered row band is VMEM-resident.
+
+    The map is viewed as [C, B*H, W]; each band (``hb`` strips) DMAs its
+    ``band_rows`` contiguous input rows (strip rows + kh-1 halo) into one of
+    two scratch slots with ``make_async_copy`` while the previous band's
+    gather + Algorithm-1 MXU loop runs.  Output layout and semantics are
+    identical to the resident megakernel — [O, n_strips*V], strip padding
+    sliced off by the ops wrapper.
+    """
+    c, b, h, w = x.shape
+    ho = out_size(h, kh, stride, pad)
+    wo = out_size(w, kw, stride, pad)
+    n_pos = b * ho * wo
+    n_strips = -(-n_pos // v)
+    n_tiles, k_kept, tile = values.shape
+    assert idx.shape == (n_tiles, k_kept), (idx.shape, values.shape)
+
+    hb = max(min(hb, n_strips), 1)
+    n_bands, band_rows = band_plan(b=b, h=h, kh=kh, stride=stride, pad=pad,
+                                   ho=ho, wo=wo, v=v, hb=hb)
+
+    block_k = min(block_k, ceil_to(k_kept, 8))
+    k_pad = ceil_to(k_kept, block_k)
+    if k_pad != k_kept:
+        values = jnp.pad(values, ((0, 0), (0, k_pad - k_kept), (0, 0)))
+        idx = jnp.pad(idx, ((0, 0), (0, k_pad - k_kept)))
+    n_kc = k_pad // block_k
+
+    grid = (n_strips, n_tiles, n_kc)
+    out = pl.pallas_call(
+        functools.partial(
+            _banded_kernel, kh=kh, kw=kw, stride=stride, pad=pad, v=v,
+            hb=hb, band_rows=band_rows, n_bands=n_bands,
+            c=c, b=b, h=h, w=w, ho=ho, wo=wo, n_kc=n_kc,
+            out_dtype=x.dtype, interpret=interpret,
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=MEM_ANY),  # map stays in HBM
+            pl.BlockSpec((1, block_k), lambda s, t, kc: (t, kc)),
+            pl.BlockSpec((1, block_k, tile), lambda s, t, kc: (t, kc, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile, v), lambda s, t, kc: (t, s)),
+        out_shape=jax.ShapeDtypeStruct((n_tiles * tile, n_strips * v), x.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((2, c, band_rows, w), x.dtype),
+            dma_semaphores(2),
+            pltpu.VMEM((tile, v), jnp.float32),
+        ],
+        compiler_params=_COMPILER_PARAMS(
+            # strips advance sequentially: the double-buffer rotation assumes
+            # band g's steps complete before band g+1's begin
+            dimension_semantics=("arbitrary", "arbitrary", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(x.reshape(c, b * h, w), idx, values)
+    return out
+
+
+def banded_vmem_bytes(c: int, w: int, band_rows: int, v: int, block_k: int,
+                      tile: int, in_bytes: int = 2) -> int:
+    """Analytic VMEM footprint of one banded-megakernel grid step: TWO row
+    bands (double buffer) instead of the whole map, plus the same gathered
+    strip tile, weight chunk, accumulator and output tile as the resident
+    kernel."""
+    bands = 2 * c * band_rows * w * in_bytes
+    patch = block_k * v * in_bytes
+    v_blk = block_k * tile * in_bytes
+    acc = tile * v * 4
+    out = tile * v * in_bytes
+    return bands + patch + v_blk + acc + out

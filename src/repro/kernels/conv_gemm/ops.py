@@ -1,17 +1,24 @@
-"""GEMM-based convolution in the paper's layouts — three execution plans:
+"""GEMM-based convolution in the paper's layouts — the conv plan ladder:
 
   fused megakernel : im2col + pack + sparse GEMM in ONE Pallas kernel; the
                      packed strips are produced and consumed in VMEM and
-                     never exist in HBM (``conv2d_fused``)
+                     never exist in HBM (``conv2d_fused``); needs the whole
+                     CNHW map VMEM-resident
+  banded megakernel: the H-tiled variant (``conv2d_fused_banded``) — only a
+                     double-buffered row band of the map is resident, DMA'd
+                     per band while the previous band's GEMM runs; covers
+                     stem-scale maps and batch > 1
   two-kernel       : fused im2col+pack kernel, then the strip-major sparse
                      GEMM consuming [n_strips, K, V] directly — no transpose
-                     relayout between the kernels
+                     relayout between the kernels; ``conv2d_two_kernel_
+                     pipelined`` overlaps the GEMM's strip loads with its
+                     compute via the same double-buffered DMA scheme
   XLA reference    : pack kernel + gather-einsum GEMM (distribution-friendly)
 
 ``conv2d_colwise_sparse`` keeps the historical entry point; with
 ``use_pallas=None`` (default) it routes through ``repro.dispatch`` and
-executes whichever registered conv candidate (including the megakernel and
-its geometry variants) the profile DB / heuristic picks.
+executes whichever registered conv candidate (including the megakernels and
+their geometry variants) the profile DB / heuristic picks.
 """
 from __future__ import annotations
 
@@ -23,9 +30,16 @@ import jax.numpy as jnp
 
 from repro.core.formats import ColwiseMeta, meta_for, pack_colwise
 from repro.core.pruning import SparsityConfig, colwise_nm_mask
-from repro.kernels.colwise_nm.ops import colwise_nm_matmul_strips
+from repro.kernels.colwise_nm.ops import (
+    colwise_nm_matmul_strips,
+    colwise_nm_matmul_strips_pipelined,
+)
 from repro.kernels.colwise_nm.ref import colwise_nm_matmul_ref
-from repro.kernels.conv_gemm.kernel import conv2d_fused_pallas
+from repro.kernels.conv_gemm.kernel import (
+    band_plan,
+    conv2d_fused_banded_pallas,
+    conv2d_fused_pallas,
+)
 from repro.kernels.im2col_pack.ops import im2col_pack
 from repro.kernels.im2col_pack.ref import out_size
 from repro.kernels.pltpu_compat import should_interpret
@@ -77,6 +91,37 @@ def conv2d_fused(
     return y[:, : b * ho * wo].reshape(o, b, ho, wo)
 
 
+@functools.partial(
+    jax.jit,
+    static_argnames=("kh", "kw", "stride", "pad", "v", "block_k", "hb"))
+def conv2d_fused_banded(
+    x_cnhw: jax.Array,
+    values: jax.Array,
+    idx: jax.Array,
+    *,
+    kh: int,
+    kw: int,
+    stride: int = 1,
+    pad: int = 0,
+    v: int = 128,
+    block_k: int = 128,
+    hb: int = 2,
+) -> jax.Array:
+    """Banded megakernel conv: the H-tiled fused plan.  Only a double-buffered
+    row band (``hb`` strips of input rows + halo) is VMEM-resident; band s+1
+    is DMA'd while band s's gather+GEMM runs.  Same numerics/layout contract
+    as :func:`conv2d_fused`.  Returns CNHW output [O, B, Ho, Wo]."""
+    c, b, h, w = x_cnhw.shape
+    ho = out_size(h, kh, stride, pad)
+    wo = out_size(w, kw, stride, pad)
+    y = conv2d_fused_banded_pallas(
+        x_cnhw, values, idx, kh=kh, kw=kw, stride=stride, pad=pad, v=v,
+        block_k=block_k, hb=hb, interpret=should_interpret(),
+    )  # [O, n_strips*v]
+    o = y.shape[0]
+    return y[:, : b * ho * wo].reshape(o, b, ho, wo)
+
+
 def conv2d_two_kernel(
     x_cnhw: jax.Array,
     values: jax.Array,
@@ -102,6 +147,51 @@ def conv2d_two_kernel(
     y = colwise_nm_matmul_strips(strips, values, idx, block_k=block_k)
     o = y.shape[0]
     return y[:, : b * ho * wo].reshape(o, b, ho, wo)
+
+
+def conv2d_two_kernel_pipelined(
+    x_cnhw: jax.Array,
+    values: jax.Array,
+    idx: jax.Array,
+    *,
+    kh: int,
+    kw: int,
+    stride: int = 1,
+    pad: int = 0,
+    v: int = 128,
+    block_k: int = 128,
+    hb: int = 2,
+) -> jax.Array:
+    """Two-kernel plan with an overlapped strip pipeline: the pack kernel
+    writes [n_strips, K, V] strips to HBM, then the *pipelined* strip-major
+    GEMM consumes them — chunks of ``hb`` strips are async-copied into a
+    double-buffered VMEM scratch so strip s+1 streams in while strip s's
+    GEMM runs, instead of the back-to-back block fetch + compute of the
+    plain plan.  Returns CNHW output [O, B, Ho, Wo]."""
+    c, b, h, w = x_cnhw.shape
+    ho = out_size(h, kh, stride, pad)
+    wo = out_size(w, kw, stride, pad)
+    strips = im2col_pack(x_cnhw, kh=kh, kw=kw, stride=stride, pad=pad, v=v)
+    y = colwise_nm_matmul_strips_pipelined(strips, values, idx,
+                                           block_k=block_k, hb=hb)
+    o = y.shape[0]
+    return y[:, : b * ho * wo].reshape(o, b, ho, wo)
+
+
+def banded_bytes_moved(c: int, b: int, h: int, w: int, kh: int, stride: int,
+                       pad: int, ho: int, wo: int, v: int, hb: int,
+                       o: int, itemsize: int) -> int:
+    """Analytic HBM traffic of the banded megakernel at band depth ``hb``:
+    every band DMAs its ``band_rows`` input-row window once (halo rows are
+    re-read by adjacent bands — that is the price of banding), and the
+    [O, P] output is written once.  Shallower bands re-read more halo;
+    deeper bands amortize it at the cost of double-buffer VMEM."""
+    n_bands, band_rows = band_plan(b=b, h=h, kh=kh, stride=stride, pad=pad,
+                                   ho=ho, wo=wo, v=v, hb=hb)
+    n_strips = -(-b * ho * wo // v)
+    band_reads = n_bands * c * band_rows * w
+    out_write = o * n_strips * v
+    return (band_reads + out_write) * itemsize
 
 
 def conv2d_xla_ref(

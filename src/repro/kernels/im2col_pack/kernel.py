@@ -32,10 +32,11 @@ from repro.kernels.pltpu_compat import COMPILER_PARAMS as _COMPILER_PARAMS
 from repro.kernels.im2col_pack.ref import out_size
 
 
-def strip_tap_coords(s, *, v, ikh, ikw, stride, pad, b, h, w, ho, wo):
+def strip_tap_coords(s, *, v, ikh, ikw, stride, pad, b, h, w, ho, wo,
+                     band_origin=None, band_rows=None):
     """Source coordinates of strip ``s``'s V output positions at kernel tap
     (ikh, ikw) — THE im2col index arithmetic, shared by this pack kernel and
-    the conv megakernel (``conv_gemm/kernel.py``) so the stride/pad/boundary
+    the conv megakernels (``conv_gemm/kernel.py``) so the stride/pad/boundary
     semantics cannot drift between them.
 
     ``ikh``/``ikw`` may be scalars (one tap, -> [v] outputs) or broadcast
@@ -43,6 +44,14 @@ def strip_tap_coords(s, *, v, ikh, ikw, stride, pad, b, h, w, ho, wo):
     Returns ``(valid, bc, ihc, iwc)``: the out-of-map / ragged-strip mask and
     clamped (always in-bounds) batch/row/col gather coordinates; ``bc`` stays
     [v] (positions do not depend on the tap).
+
+    Band mode (``band_origin``/``band_rows`` set): for kernels that keep only
+    a row band of the feature map resident (the banded megakernel), the
+    returned row coordinate is *band-local* in the flattened ``(batch*h)``
+    row space — ``bb*h + ih - band_origin``, clamped to ``[0, band_rows)`` —
+    and the batch coordinate is dropped (the flattened row subsumes it):
+    returns ``(valid, rowc, iwc)``.  ``band_origin`` may be a traced scalar
+    (it is derived from the grid position inside the kernel).
     """
     p = s * v + jax.lax.iota(jnp.int32, v)  # flat output positions of strip
     n_pos = b * ho * wo
@@ -54,6 +63,9 @@ def strip_tap_coords(s, *, v, ikh, ikw, stride, pad, b, h, w, ho, wo):
     iw = ow * stride - pad + ikw
     valid = (p < n_pos) & (ih >= 0) & (ih < h) & (iw >= 0) & (iw < w)
     # clamp so the gather itself is always in-bounds; masked after
+    if band_origin is not None:
+        g = bb * h + ih - band_origin  # band-local flattened (batch*h) row
+        return (valid, jnp.clip(g, 0, band_rows - 1), jnp.clip(iw, 0, w - 1))
     return (valid, jnp.clip(bb, 0, b - 1), jnp.clip(ih, 0, h - 1),
             jnp.clip(iw, 0, w - 1))
 

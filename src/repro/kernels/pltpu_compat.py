@@ -2,12 +2,86 @@
 
 jax renamed ``TPUCompilerParams`` -> ``CompilerParams`` across 0.4.x/0.5.x;
 accept either so the kernels run on whatever toolchain the image bakes in.
+The async-copy surface (``make_async_copy`` / ``SemaphoreType`` / the ANY
+memory space) moved around the same releases; the banded/pipelined kernels go
+through the shims below so a toolchain without manual DMA support degrades to
+a clear "not available" signal (the dispatch predicates gate on it) instead
+of an AttributeError mid-trace.
 """
 import jax
 import jax.numpy as jnp
 from jax.experimental.pallas import tpu as pltpu
 
 COMPILER_PARAMS = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+
+# ---------------------------------------------------------------------------
+# Async-copy (manual DMA) shims — used by the banded conv megakernel and the
+# pipelined strip GEMM, which keep their big operand in HBM and double-buffer
+# row bands / strip chunks into VMEM scratch.
+# ---------------------------------------------------------------------------
+
+# memory space that lets a pallas_call input stay un-blocked (HBM/compiler's
+# choice) so the kernel can DMA slices of it manually
+MEM_ANY = getattr(pltpu, "ANY", None)
+if MEM_ANY is None:  # pre-rename spelling
+    MEM_ANY = getattr(getattr(pltpu, "TPUMemorySpace", None), "ANY", None)
+
+_MAKE_ASYNC_COPY = getattr(pltpu, "make_async_copy", None)
+SEMAPHORE_TYPE = getattr(pltpu, "SemaphoreType", None)
+
+HAS_ASYNC_COPY = (
+    _MAKE_ASYNC_COPY is not None and SEMAPHORE_TYPE is not None
+    and MEM_ANY is not None
+)
+
+
+def make_async_copy(src_ref, dst_ref, sem_ref):
+    """Async copy descriptor (``.start()`` / ``.wait()``) between memory
+    spaces, shared by every double-buffered kernel.  Interpret mode executes
+    the same descriptor (jax simulates the semaphore), so the DMA path is
+    testable on CPU."""
+    if _MAKE_ASYNC_COPY is None:
+        raise NotImplementedError(
+            "this jax/pallas build has no pltpu.make_async_copy; the banded/"
+            "pipelined conv plans are unavailable (their dispatch predicates "
+            "should have gated on pltpu_compat.HAS_ASYNC_COPY)")
+    return _MAKE_ASYNC_COPY(src_ref, dst_ref, sem_ref)
+
+
+def dma_semaphores(n: int):
+    """Scratch-shape entry for ``n`` DMA completion semaphores."""
+    if SEMAPHORE_TYPE is None:
+        raise NotImplementedError(
+            "this jax/pallas build has no pltpu.SemaphoreType; manual-DMA "
+            "kernels are unavailable")
+    return SEMAPHORE_TYPE.DMA((n,))
+
+
+def double_buffer_rotate(dma, g, n_chunks, *, gate):
+    """THE two-slot DMA rotation protocol, shared by every double-buffered
+    kernel (banded conv megakernel, pipelined strip GEMM) so the
+    correctness-critical ordering lives in one place.
+
+    Under ``gate`` (the predicate marking the first grid step of chunk
+    ``g``): warm up chunk 0's copy, start the prefetch of chunk g+1 into the
+    other slot, THEN block on chunk g — so chunk g+1 streams in behind chunk
+    g's compute.  ``dma(slot, gi)`` must return the async-copy descriptor
+    for chunk ``gi`` into scratch slot ``slot``; the descriptor a ``wait``
+    reconstructs must be identical to the one ``start`` used.
+    """
+    from jax.experimental import pallas as pl
+
+    @pl.when(gate)
+    def _rotate():
+        @pl.when(g == 0)
+        def _warmup():
+            dma(0, 0).start()
+
+        @pl.when(g + 1 < n_chunks)
+        def _prefetch():
+            dma((g + 1) % 2, g + 1).start()
+
+        dma(g % 2, g).wait()
 
 
 def dot_f32(a, b, interpret: bool):

@@ -1,0 +1,151 @@
+"""ResNet-style vision model built on ``conv_init``/``conv_apply``.
+
+The LM side of the zoo exercises the paper's technique through
+``linear_init``/``linear_apply``; this module is the conv twin: a stack of
+ResNet *basic blocks* whose every convolution is a ``core.sparse_conv``
+layer, so a :class:`repro.configs.base.VisionConfig` drives the pruned-conv
+dispatch path (fused megakernel / banded / pipelined two-kernel / XLA — see
+``docs/kernels.md``) end-to-end with real params.
+
+Layout is the paper's CNHW throughout.  Norm layers are intentionally
+omitted (parameter-free identity): the repro targets the conv GEMM data
+path, and a norm between convs would not change which execution plan is
+selected.  ``conv_hints`` walks the same structure the init does and emits
+the per-layer map shapes ``dispatch.plan_params`` needs to pre-profile every
+conv under its exact ``conv_key`` token — the build-time twin of what
+``conv_apply`` resolves at trace time.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import VisionConfig
+from repro.core.pruning import DENSE
+from repro.core.sparse_conv import conv_apply, conv_init
+from repro.core.sparse_linear import Boxed, linear_apply, linear_init
+from repro.kernels.im2col_pack.ref import out_size
+
+
+# ---------------------------------------------------------------------------
+# ResNet basic block
+# ---------------------------------------------------------------------------
+
+
+def resnet_block_init(key, c_in: int, c_out: int, cfg: VisionConfig, *,
+                      stride: int = 1, dtype=jnp.float32) -> Dict[str, Any]:
+    """Params of one basic block: 3x3 conv -> 3x3 conv + residual; a 1x1
+    strided projection when the shortcut changes shape.  Every conv is a
+    ``conv_init`` layer (pruned per ``cfg.sparsity``; the stem-like 1x1
+    projection is left dense by ``min_dim`` exactly as the paper skips its
+    3-channel stem)."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    params = {
+        "conv1": conv_init(k1, c_in, c_out, 3, 3, cfg.sparsity, dtype=dtype),
+        "conv2": conv_init(k2, c_out, c_out, 3, 3, cfg.sparsity, dtype=dtype),
+    }
+    if stride != 1 or c_in != c_out:
+        params["proj"] = conv_init(k3, c_in, c_out, 1, 1, cfg.sparsity,
+                                   dtype=dtype)
+    return params
+
+
+def resnet_block_apply(params, x_cnhw: jax.Array, *, stride: int = 1,
+                       v: int = 128, impl: Optional[str] = None) -> jax.Array:
+    """Apply one basic block to a CNHW map (unboxed params)."""
+    y = conv_apply(params["conv1"], x_cnhw, kh=3, kw=3, stride=stride, pad=1,
+                   v=v, impl=impl)
+    y = jax.nn.relu(y)
+    y = conv_apply(params["conv2"], y, kh=3, kw=3, stride=1, pad=1, v=v,
+                   impl=impl)
+    if "proj" in params:
+        short = conv_apply(params["proj"], x_cnhw, kh=1, kw=1, stride=stride,
+                           pad=0, v=v, impl=impl)
+    else:
+        short = x_cnhw
+    return jax.nn.relu(y + short)
+
+
+# ---------------------------------------------------------------------------
+# Whole model: stem conv -> stages of basic blocks -> pooled linear head
+# ---------------------------------------------------------------------------
+
+
+def _block_strides(cfg: VisionConfig):
+    """(stage, index-in-stage, stride, c_in, c_out) per block, in order."""
+    out = []
+    c_prev = cfg.stem_channels
+    for si, (ch, n, st) in enumerate(zip(cfg.stage_channels, cfg.stage_blocks,
+                                         cfg.stage_strides)):
+        for bi in range(n):
+            out.append((si, bi, st if bi == 0 else 1, c_prev, ch))
+            c_prev = ch
+    return out
+
+
+def vision_init(cfg: VisionConfig, key) -> Dict[str, Any]:
+    """Boxed params tree: ``{"stem", "blocks": [...], "head"}``."""
+    dtype = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 2 + len(_block_strides(cfg)))
+    params: Dict[str, Any] = {
+        # 3-channel stem stays dense via min_dim, mirroring the paper
+        "stem": conv_init(ks[0], cfg.c_in, cfg.stem_channels, 3, 3,
+                          cfg.sparsity, dtype=dtype),
+        "blocks": [],
+    }
+    for i, (_si, _bi, stride, c_in, c_out) in enumerate(_block_strides(cfg)):
+        params["blocks"].append(
+            resnet_block_init(ks[1 + i], c_in, c_out, cfg, stride=stride,
+                              dtype=dtype))
+    # pooled classifier head: a sparse_linear layer (the same tree then
+    # exercises BOTH op kinds of the plan_params discriminator); tiny heads
+    # stay dense via min_dim
+    params["head"] = linear_init(ks[-1], cfg.stage_channels[-1],
+                                 cfg.num_classes, cfg.sparsity, dtype=dtype,
+                                 in_ax="embed", out_ax=None)
+    return params
+
+
+def vision_apply(params, cfg: VisionConfig, x_cnhw: jax.Array, *,
+                 impl: Optional[str] = None) -> jax.Array:
+    """Forward pass: CNHW images [C, B, H, W] -> logits [B, num_classes]."""
+    y = conv_apply(params["stem"], x_cnhw, kh=3, kw=3, stride=1, pad=1,
+                   v=cfg.strip_v, impl=impl)
+    y = jax.nn.relu(y)
+    for block, (_si, _bi, stride, _ci, _co) in zip(params["blocks"],
+                                                   _block_strides(cfg)):
+        y = resnet_block_apply(block, y, stride=stride, v=cfg.strip_v,
+                               impl=impl)
+    feats = y.mean(axis=(2, 3)).T  # global average pool -> [B, C]
+    return linear_apply(params["head"], feats)
+
+
+def conv_hints(cfg: VisionConfig, batch: int = 1) -> Dict[str, Dict[str, int]]:
+    """Per-layer map-shape hints for ``dispatch.plan_params(conv_hints=...)``.
+
+    Walks the block structure with the same stride arithmetic as
+    ``vision_apply``, so every planned ``conv_key`` token matches the one the
+    trace-time ``conv_apply`` call site resolves.  Keys are layer-path
+    substrings (``blocks[i]/conv1`` ...) as produced by
+    ``dispatch.iter_op_layers``.
+    """
+    h, w = cfg.image_hw
+    hints: Dict[str, Dict[str, int]] = {
+        "stem": {"h": h, "w": w, "batch": batch, "stride": 1, "pad": 1,
+                 "v": cfg.strip_v},
+    }
+    for i, (_si, _bi, stride, _ci, _co) in enumerate(_block_strides(cfg)):
+        hints[f"blocks[{i}]/conv1"] = {
+            "h": h, "w": w, "batch": batch, "stride": stride, "pad": 1,
+            "v": cfg.strip_v}
+        hints[f"blocks[{i}]/proj"] = {
+            "h": h, "w": w, "batch": batch, "stride": stride, "pad": 0,
+            "v": cfg.strip_v}
+        h = out_size(h, 3, stride, 1)
+        w = out_size(w, 3, stride, 1)
+        hints[f"blocks[{i}]/conv2"] = {
+            "h": h, "w": w, "batch": batch, "stride": 1, "pad": 1,
+            "v": cfg.strip_v}
+    return hints

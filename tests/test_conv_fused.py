@@ -197,7 +197,9 @@ class TestConvLayerAbstraction:
     def test_conv_init_compressed_params(self):
         params = conv_init(jax.random.PRNGKey(0), 8, 16, 3, 3, self.CFG)
         vals, specs = unbox_tree(params)
-        assert set(vals) == {"values", "idx"}
+        # conv_geom is the op discriminator dispatch.plan_params keys on
+        assert set(vals) == {"values", "idx", "conv_geom"}
+        assert [int(v) for v in vals["conv_geom"]] == [3, 3, 8]
         n_tiles, k_kept, tile = vals["values"].shape
         assert n_tiles * tile == 16 and vals["idx"].shape == (n_tiles, k_kept)
 
