@@ -77,6 +77,71 @@ def _eval(cfg, params, data, n=8, start=100000):
     return float(np.mean(losses))
 
 
+def run_conv(dense_steps: int = 160, ft_steps: int = 60, iters=None,
+             batch: int = 16):
+    """Conv cell (paper's actual accuracy protocol, proxy scale): dense
+    resnet-tiny train -> one-shot column-wise prune -> masked finetune
+    *through the sparse-conv backward* -> compress -> compressed-inference
+    accuracy, on a learnable synthetic task.  Reports the dense->compressed
+    accuracy delta — the conv twin of the Table-1 ordering cells.
+
+    ``iters`` (the --quick knob) shrinks the step counts.
+    """
+    import jax
+
+    from repro.configs import get_vision_config
+    from repro.core import DENSE, compress_conv_tree, prune_conv_tree, unbox_tree
+    from repro.models import vision
+
+    if iters is not None:
+        dense_steps, ft_steps = 4 * int(iters), 3 * int(iters)
+    cfg = get_vision_config("resnet-tiny")
+    scfg = cfg.sparsity.with_(format="masked")
+    dense_cfg = cfg.with_(sparsity=DENSE)
+
+    params, _ = unbox_tree(vision.vision_init(dense_cfg, jax.random.PRNGKey(0)))
+    step = jax.jit(lambda p, m, x, y: vision.train_step(p, m, dense_cfg, x, y,
+                                                        lr=0.05))
+
+    def train(params, steps, start):
+        mom = vision.sgd_init(params)
+        loss = float("nan")
+        for k in range(steps):
+            x, y = vision.synth_batch(cfg, jax.random.PRNGKey(1000 + start + k),
+                                      batch)
+            params, mom, loss = step(params, mom, x, y)
+        return params, float(loss)
+
+    def accuracy(params, n=4):
+        accs = []
+        for i in range(n):
+            x, y = vision.synth_batch(cfg, jax.random.PRNGKey(777 + i), batch)
+            accs.append(vision.vision_accuracy(params, cfg, x, y))
+        return float(np.mean(accs))
+
+    params, _ = train(params, dense_steps, 0)
+    dense_acc = accuracy(params)
+    out = [row("conv.dense", 0.0, f"acc={dense_acc:.3f}")]
+
+    pruned = prune_conv_tree(params, scfg)
+    oneshot_acc = accuracy(pruned)
+    tuned, _ = train(pruned, ft_steps, dense_steps)
+    ft_acc = accuracy(tuned)
+    out.append(row("conv.masked_ft", 0.0,
+                   f"acc={ft_acc:.3f} oneshot={oneshot_acc:.3f}"))
+
+    # compress every masked conv layer (stored mask pins the support) and
+    # run compressed inference — the deployment format's accuracy
+    comp_params = compress_conv_tree(
+        tuned, scfg.with_(format="compressed_pallas"))
+    comp_acc = accuracy(comp_params)
+    out.append(row(
+        "conv.compressed", 0.0,
+        f"acc={comp_acc:.3f} delta_vs_dense={dense_acc - comp_acc:+.3f} "
+        f"delta_vs_masked={ft_acc - comp_acc:+.3f}"))
+    return out
+
+
 def run(dense_steps: int = 120, ft_steps: int = 60):
     cfg = _cfg()
     data = SyntheticLM(DataConfig(vocab_size=VOCAB, batch=16, seq_len=48, seed=11))

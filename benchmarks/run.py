@@ -26,6 +26,8 @@ import traceback
 
 
 def _modules():
+    import types
+
     from benchmarks import (
         bench_accuracy,
         bench_blockwidth,
@@ -45,6 +47,10 @@ def _modules():
         ("fig6_8_fusion", bench_fusion),
         ("fig9_blockwidth", bench_blockwidth),
         ("table1_accuracy", bench_accuracy),
+        # conv cell of the accuracy protocol (dense -> prune -> finetune
+        # through the sparse-conv backward -> compressed inference); its own
+        # entry so --quick can run it without the full LM Table-1 sweep
+        ("conv_accuracy", types.SimpleNamespace(run=bench_accuracy.run_conv)),
         ("table2_fig11_e2e", bench_e2e),
         ("fig12_layout", bench_layout),
         ("roofline", bench_roofline),
@@ -53,7 +59,7 @@ def _modules():
     ]
 
 
-QUICK = {"fig5_conv_layers", "dispatch"}
+QUICK = {"fig5_conv_layers", "dispatch", "conv_accuracy"}
 QUICK_ITERS = 3  # median of 3: the middle sample, robust to one outlier
 
 

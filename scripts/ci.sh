@@ -12,6 +12,9 @@ echo "== serve scheduler smoke =="
 python -m repro.launch.serve --arch smollm-360m --smoke --continuous \
     --requests 6 --slots 3 --prompt-len 12 --new-tokens 8 --prefill-chunk 8
 
+echo "== sparse finetune smoke (conv VJP backward, interpret mode) =="
+python -c "from repro.models.vision import train_smoke; train_smoke(steps=2)"
+
 echo "== quick benchmarks =="
 python -m benchmarks.run --quick
 

@@ -6,6 +6,8 @@ from repro.core.pruning import (  # noqa: F401
     SparsityConfig,
     colwise_importance,
     colwise_nm_mask,
+    conv_colwise_nm_mask,
+    mask_project_tree,
     prune_tree,
     resolve_dims,
     rowwise_nm_mask,
@@ -19,9 +21,13 @@ from repro.core.formats import (  # noqa: F401
     unpack_colwise,
 )
 from repro.core.sparse_conv import (  # noqa: F401
+    apply_conv_mask,
     compress_conv_layer,
+    compress_conv_tree,
     conv_apply,
     conv_init,
+    prune_conv_tree,
+    refresh_conv_mask,
 )
 from repro.core.sparse_linear import (  # noqa: F401
     Boxed,

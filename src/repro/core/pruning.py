@@ -175,6 +175,26 @@ def colwise_nm_mask(
     return mask
 
 
+def conv_colwise_nm_mask(
+    w_ohwi: jax.Array,
+    sparsity: float,
+    m: Optional[int] = None,
+    tile: Optional[int] = None,
+) -> jax.Array:
+    """Column-wise N:M mask for an OHWI conv kernel.
+
+    Pruning is column-wise over the conv's GEMM view [Kh*Kw*C, O]: the
+    prune/keep unit is a whole (kh, kw, c) tap shared by an output-channel
+    tile — exactly the unit the compressed conv kernels gather.  Returns a
+    boolean mask in the kernel's own OHWI layout, so masked training keeps
+    the weight and its mask in one layout.
+    """
+    o, kh, kw, c = w_ohwi.shape
+    wmat = w_ohwi.reshape(o, kh * kw * c).T  # GEMM view [K, O]
+    mask = colwise_nm_mask(wmat, sparsity, m=m, tile=tile)
+    return mask.T.reshape(o, kh, kw, c)
+
+
 def rowwise_nm_mask(
     w: jax.Array, sparsity: float, m: Optional[int] = None
 ) -> jax.Array:
@@ -266,3 +286,30 @@ def prune_tree(params, cfg: SparsityConfig, is_weight=None):
         jax.tree_util.tree_unflatten(treedef, new_leaves),
         jax.tree_util.tree_unflatten(treedef, mask_leaves),
     )
+
+
+def mask_project_tree(params):
+    """Re-apply every masked layer's stored ``mask`` to its ``w``.
+
+    The per-step projection of masked finetuning (paper §4.1.2: the support
+    is held fixed while the kept weights train): run it after each optimizer
+    update so momentum/weight-decay cannot resurrect pruned positions.
+    Works on any params tree whose layer dicts carry both ``w`` and ``mask``
+    — linear ([d_in, d_out]) and conv (OHWI) layers alike, ``Boxed`` or raw
+    leaves; everything else passes through untouched.
+    """
+    from repro.core.sparse_conv import apply_conv_mask
+
+    def _walk(t):
+        if isinstance(t, dict):
+            # apply_conv_mask holds the single copy of the w*mask projection
+            # (Boxed-aware, no-op without a mask); it is layout-agnostic, so
+            # linear [d_in, d_out] layers project through it too
+            return apply_conv_mask({k: _walk(v) for k, v in t.items()})
+        if isinstance(t, list):
+            return [_walk(v) for v in t]
+        if isinstance(t, tuple):
+            return tuple(_walk(v) for v in t)
+        return t
+
+    return _walk(params)

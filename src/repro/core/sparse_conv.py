@@ -24,7 +24,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import formats
-from repro.core.pruning import SparsityConfig
+from repro.core.pruning import SparsityConfig, conv_colwise_nm_mask
 from repro.core.sparse_linear import Boxed
 
 
@@ -68,16 +68,11 @@ def conv_init(
         w = jax.random.normal(key, (c_out, kh, kw, c_in), dtype)
         w = w * jnp.asarray(scale, dtype)
         if prune and cfg.format == "masked":
-            from repro.core.pruning import colwise_nm_mask
-
-            wmat = w.reshape(c_out, d_in).T  # GEMM view [K, O]
             meta = formats.meta_for(d_in, c_out, cfg)
-            mask = colwise_nm_mask(wmat, cfg.sparsity, m=cfg.m,
-                                   tile=meta.tile)
-            w = ((wmat * mask).T.reshape(c_out, kh, kw, c_in)).astype(dtype)
-            params["mask"] = Boxed(
-                mask.T.reshape(c_out, kh, kw, c_in),
-                (None, None, None, "embed"))
+            mask = conv_colwise_nm_mask(w, cfg.sparsity, m=cfg.m,
+                                        tile=meta.tile)
+            w = (w * mask).astype(dtype)
+            params["mask"] = Boxed(mask, (None, None, None, "embed"))
         elif prune:
             raise ValueError(
                 f"conv_init does not support pruning format {cfg.format!r}")
@@ -100,25 +95,23 @@ def conv_apply(
 ) -> jax.Array:
     """Apply a layer created by ``conv_init`` (unboxed params) to a CNHW map.
 
-    Compressed layers route through ``repro.dispatch``: the execution plan
-    (fused megakernel geometry variant, two-kernel strip-major, XLA
+    Compressed layers route through ``repro.dispatch`` via the
+    ``conv2d_sparse`` custom-VJP wrapper: the execution plan (fused
+    megakernel geometry variant, banded, two-kernel pipelined, XLA
     reference) is chosen per conv shape from the profile DB / platform
-    heuristic; ``impl=`` forces a specific candidate.  Dense layers run the
-    lax reference conv.  Returns CNHW output [O, B, Ho, Wo].
+    heuristic, and the layer is differentiable — ``jax.grad`` through it
+    yields the transposed-conv ``dx`` and packed ``dvalues`` gradients
+    whatever rung the forward ran on.  ``impl=`` forces a specific
+    candidate.  Masked and dense layers run the lax reference conv (also
+    differentiable; the mask factor confines ``w``'s gradient support at
+    the first backward step, and ``apply_conv_mask`` re-projects after
+    optimizer updates).  Returns CNHW output [O, B, Ho, Wo].
     """
     if "values" in params:
-        from repro import dispatch as _dispatch
+        from repro.kernels.conv_gemm.ops import conv2d_sparse
 
-        values, idx = params["values"], params["idx"]
-        c, b, h, w = x_cnhw.shape
-        n_tiles, k_kept, tile = (int(s) for s in values.shape)
-        key = _dispatch.conv_key(
-            c, h, w, n_tiles * tile, kh, kw, stride, pad, k_kept, tile,
-            v=v, dtype=x_cnhw.dtype, batch=b, phase=_dispatch.current_phase())
-        spec = _dispatch.best_impl(key, param_keys=("values", "idx"),
-                                   force=impl)
-        y = spec.apply({"values": values, "idx": idx}, x_cnhw,
-                       kh=kh, kw=kw, stride=stride, pad=pad, v=v)
+        y = conv2d_sparse(x_cnhw, params["values"], params["idx"], kh=kh,
+                          kw=kw, stride=stride, pad=pad, v=v, impl=impl)
     else:
         from repro.kernels.conv_gemm.ref import conv2d_cnhw_ref
 
@@ -132,15 +125,173 @@ def conv_apply(
 
 
 def compress_conv_layer(params, kh: int, kw: int, cfg: SparsityConfig):
-    """Convert a dense conv layer (OHWI ``w``) into compressed GEMM format."""
+    """Convert a dense/masked conv layer (OHWI ``w``) into compressed GEMM
+    format.
+
+    A stored ``mask`` (masked finetuning) pins the kept support exactly —
+    the packed layer reproduces the finetuned masked forward bit-for-bit;
+    without one the column-wise mask is recomputed from ``|w|`` (one-shot).
+    Leaves are ``Boxed`` with the same logical axes as ``conv_init`` emits,
+    so a post-hoc-compressed tree is structurally identical to a born-sparse
+    one: sharding rules and ``dispatch.plan_params`` (which keys off the
+    boxed ``conv_geom`` discriminator) see no difference.
+    """
     from repro.kernels.conv_gemm.ops import compress_conv_weights
 
     w = params["w"]
     w = w.value if isinstance(w, Boxed) else w
-    values, idx, _meta = compress_conv_weights(w, cfg)
-    out = {"values": values, "idx": idx,
-           "conv_geom": jnp.asarray([kh, kw, w.shape[3]], jnp.int32)}
+    mask = params.get("mask")
+    if mask is not None:
+        mask = mask.value if isinstance(mask, Boxed) else mask
+        o, _kh, _kw, c_in = w.shape
+        d_in = _kh * _kw * c_in
+        meta = formats.meta_for(d_in, o, cfg)
+        values, idx = formats.pack_colwise(
+            w.reshape(o, d_in).T, mask.reshape(o, d_in).T, meta)
+    else:
+        values, idx, _meta = compress_conv_weights(w, cfg)
+    out = {"values": Boxed(values, ("tile", "kept", None)),
+           "idx": Boxed(idx, ("tile", None)),
+           "conv_geom": Boxed(
+               jnp.asarray([kh, kw, w.shape[3]], jnp.int32), (None,))}
     if "b" in params:
         b = params["b"]
-        out["b"] = b.value if isinstance(b, Boxed) else b
+        b = b.value if isinstance(b, Boxed) else b
+        out["b"] = Boxed(b, (None,))
     return out
+
+
+# ---------------------------------------------------------------------------
+# Masked-finetune hooks: projection + mask refresh (the conv training story)
+# ---------------------------------------------------------------------------
+
+
+def apply_conv_mask(params):
+    """Project a masked conv layer's ``w`` onto its stored ``mask``.
+
+    The per-step projection of masked finetuning, mirroring the linear
+    layers' training story: the optimizer updates every position, then the
+    projection zeroes the pruned ones so the support stays fixed.  Boxed or
+    raw leaves; layers without a mask pass through unchanged.
+    """
+    if "mask" not in params or "w" not in params:
+        return params
+    w, m = params["w"], params["mask"]
+    wv = w.value if isinstance(w, Boxed) else w
+    mv = m.value if isinstance(m, Boxed) else m
+    new = wv * mv.astype(wv.dtype)
+    if isinstance(w, Boxed):
+        new = Boxed(new, w.spec)
+    return {**params, "w": new}
+
+
+def refresh_conv_mask(params, cfg: SparsityConfig):
+    """Recompute a masked conv layer's column-wise mask from its *current*
+    weights and re-apply it.
+
+    The mask-refresh hook of masked finetuning: periodically re-selecting
+    the kept (kh, kw, c) taps by importance lets the support track the
+    finetuned weights (the iterative variant of the paper's one-shot
+    recipe), after which the projection holds the new support fixed.
+    Layers without a mask pass through unchanged.
+    """
+    if "mask" not in params or "w" not in params:
+        return params
+    w, m = params["w"], params["mask"]
+    wv = w.value if isinstance(w, Boxed) else w
+    o, _kh, _kw, c_in = wv.shape
+    meta = formats.meta_for(_kh * _kw * c_in, o, cfg)
+    mask = conv_colwise_nm_mask(wv, cfg.sparsity, m=cfg.m, tile=meta.tile)
+    new_w = (wv * mask).astype(wv.dtype)
+    if isinstance(w, Boxed):
+        return {**params, "w": Boxed(new_w, w.spec),
+                "mask": Boxed(mask, m.spec)}
+    return {**params, "w": new_w, "mask": mask}
+
+
+def compress_conv_tree(params, cfg: SparsityConfig):
+    """Compress every masked conv layer in a params tree to the packed
+    deployment format — the last step of the conv accuracy protocol
+    (``prune_conv_tree`` -> masked finetune -> ``compress_conv_tree`` ->
+    compressed inference).
+
+    Conv layer dicts carrying a ``mask`` (4-D OHWI ``w``) go through
+    :func:`compress_conv_layer`, so the stored mask pins the packed support
+    exactly; dense convs and linear layers pass through untouched.  Boxing
+    mirrors the input: a raw-leaf (unboxed training) tree comes back with
+    raw leaves, a ``Boxed`` tree stays ``Boxed``.
+    """
+    from repro.core.sparse_linear import unbox_tree
+
+    def _walk(t):
+        if isinstance(t, dict):
+            w = t.get("w")
+            wv = w.value if isinstance(w, Boxed) else w
+            if w is not None and "mask" in t and getattr(wv, "ndim", 0) == 4:
+                comp = compress_conv_layer(
+                    t, int(wv.shape[1]), int(wv.shape[2]), cfg)
+                if not isinstance(w, Boxed):
+                    comp, _ = unbox_tree(comp)
+                return comp
+            return {k: _walk(v) for k, v in t.items()}
+        if isinstance(t, list):
+            return [_walk(v) for v in t]
+        if isinstance(t, tuple):
+            return tuple(_walk(v) for v in t)
+        return t
+
+    return _walk(params)
+
+
+def prune_conv_tree(params, cfg: SparsityConfig):
+    """One-shot column-wise prune a vision params tree into masked format.
+
+    Walks the tree for conv layer dicts (4-D OHWI ``w``) and linear layer
+    dicts (2-D ``w``) whose GEMM dims clear ``cfg.min_dim``, and adds a
+    ``mask`` + masks ``w`` in place — the tree then has exactly the
+    structure ``conv_init``/``linear_init`` emit for ``format="masked"``,
+    ready for masked finetuning (``models.vision.train_step``) and for
+    ``compress_conv_layer``/``compress_layer`` afterwards.  Boxed or raw
+    leaves.
+    """
+    from repro.core.pruning import colwise_nm_mask
+
+    def _prune_layer(layer):
+        w = layer["w"]
+        wv = w.value if isinstance(w, Boxed) else w
+        if wv.ndim == 4:
+            o, _kh, _kw, c_in = wv.shape
+            d_in, d_out = _kh * _kw * c_in, o
+        elif wv.ndim == 2:
+            d_in, d_out = wv.shape
+        else:
+            return layer
+        if not cfg.applies_to(d_in, d_out):
+            return layer
+        meta = formats.meta_for(d_in, d_out, cfg)
+        if wv.ndim == 4:
+            mask = conv_colwise_nm_mask(wv, cfg.sparsity, m=cfg.m,
+                                        tile=meta.tile)
+            mask_spec = (None, None, None, "embed")
+        else:
+            mask = colwise_nm_mask(wv, cfg.sparsity, m=cfg.m, tile=meta.tile)
+            mask_spec = ("embed", None)
+        new_w = (wv * mask).astype(wv.dtype)
+        if isinstance(w, Boxed):
+            return {**layer, "w": Boxed(new_w, w.spec),
+                    "mask": Boxed(mask, mask_spec)}
+        return {**layer, "w": new_w, "mask": mask}
+
+    def _walk(t):
+        if isinstance(t, dict):
+            out = {k: _walk(v) for k, v in t.items()}
+            if "w" in t and "mask" not in t:
+                out = _prune_layer(out)
+            return out
+        if isinstance(t, list):
+            return [_walk(v) for v in t]
+        if isinstance(t, tuple):
+            return tuple(_walk(v) for v in t)
+        return t
+
+    return _walk(params)

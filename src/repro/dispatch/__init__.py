@@ -38,6 +38,7 @@ from repro.dispatch.dispatch import (  # noqa: F401
     iter_compressed_layers,
     iter_op_layers,
     linear_impl,
+    no_profile_scope,
     phase_scope,
     plan_params,
     set_db,

@@ -97,7 +97,33 @@ def _env_force() -> Optional[str]:
     return os.environ.get("REPRO_DISPATCH_FORCE") or None
 
 
+# Ambient profiling suppression.  ``REPRO_DISPATCH_PROFILE=1`` lets best_impl
+# wall-clock candidates on a DB miss — acceptable while tracing a *forward*
+# (the historical behaviour), but a gradient trace re-enters every call site
+# a second time through the custom-VJP fwd rule, and wall-clocking synthetic
+# candidates from inside jax.grad tracing would both skew the measurements
+# and stall the trace.  The conv/linear VJP fwd rules wrap their dispatch
+# resolution in :func:`no_profile_scope`, so grad tracing resolves from the
+# DB/heuristic only and never re-enters the profiler.
+_NO_PROFILE = False
+
+
+@contextlib.contextmanager
+def no_profile_scope():
+    """Suppress profile-on-miss inside this (tracing) scope: best_impl falls
+    back to DB / heuristic resolution, never wall-clocks candidates."""
+    global _NO_PROFILE
+    prev = _NO_PROFILE
+    _NO_PROFILE = True
+    try:
+        yield
+    finally:
+        _NO_PROFILE = prev
+
+
 def _profile_on_miss() -> bool:
+    if _NO_PROFILE:
+        return False
     return os.environ.get("REPRO_DISPATCH_PROFILE", "0").lower() in ("1", "on", "true")
 
 
@@ -129,8 +155,12 @@ def best_impl(key: OpKey, *, param_keys: Optional[Iterable[str]] = None,
         # pre-dispatch behaviour of the call sites
         force = _env_force()
     the_db = db if db is not None else get_db()
+    # _profile_on_miss() is part of the key: a resolution memoized inside a
+    # no_profile_scope (grad tracing) must not shadow a later forward-trace
+    # lookup that is allowed to profile the same token
     memo_key = (key.token, pk, force, explicit, dispatch_enabled(),
-                the_db.uid, the_db.generation, REGISTRY.generation)
+                _profile_on_miss(), the_db.uid, the_db.generation,
+                REGISTRY.generation)
     hit = _MEMO.get(memo_key)
     if hit is not None:
         return hit

@@ -10,5 +10,7 @@ from repro.kernels.colwise_nm.ops import (  # noqa: F401
     colwise_nm_matmul,
     colwise_nm_matmul_strips,
     colwise_nm_matmul_strips_pipelined,
+    sparse_grad_dvalues,
+    sparse_grad_dxg,
 )
 from repro.kernels.colwise_nm.ref import colwise_nm_matmul_ref  # noqa: F401

@@ -47,6 +47,37 @@ def colwise_nm_matmul_strips_pipelined(strips, values, idx, *,
     )
 
 
+# ---------------------------------------------------------------------------
+# Shared backward contractions — used by this linear VJP and by the conv twin
+# (``conv_gemm/ops.py``), which sees the same [.., n_tiles, k]/[.., n_tiles,
+# tile] layouts with its flattened output positions as the leading dim.  Both
+# einsums accumulate in float32 (``preferred_element_type``): for bf16 params
+# the gradient contraction would otherwise run entirely in bf16 and lose
+# ~half the mantissa over the reduction.
+# ---------------------------------------------------------------------------
+
+
+def sparse_grad_dxg(dy_t, values):
+    """dL/d(gathered activations) of ``y_t = xg @ values[t]``.
+
+    dy_t: [..., n_tiles, tile]; values: [n_tiles, k, tile].
+    Returns [..., n_tiles, k] in float32 (caller scatters, then casts).
+    """
+    return jnp.einsum("...tf,tkf->...tk", dy_t, values,
+                      preferred_element_type=jnp.float32)
+
+
+def sparse_grad_dvalues(xg, dy_t, dtype):
+    """dL/dvalues of ``y_t = xg @ values[t]``: gathered-activation x dy
+    contraction over the leading (row/position) dims, f32 accumulation.
+
+    xg: [..., n_tiles, k]; dy_t: [..., n_tiles, tile].
+    Returns [n_tiles, k, tile] cast to the param ``dtype``.
+    """
+    return jnp.einsum("...tk,...tf->tkf", xg, dy_t,
+                      preferred_element_type=jnp.float32).astype(dtype)
+
+
 @functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
 def _matmul(x, values, idx, block_b, block_k):
     return colwise_nm_matmul_pallas(
@@ -63,11 +94,15 @@ def _bwd(block_b, block_k, res, dy):
     x, values, idx = res
     n_tiles, k_kept, tile = values.shape
     dy_t = dy.reshape(*dy.shape[:-1], n_tiles, tile)
-    # dL/d(x_gathered) then scatter-add back to d_in positions
-    dxg = jnp.einsum("...tf,tkf->...tk", dy_t, values)
-    dx = jnp.zeros_like(x).at[..., idx].add(dxg)
+    # dL/d(x_gathered) then scatter-add back to d_in positions.  The scatter
+    # accumulates in a float32 buffer: tiles sharing a kept d_in index (the
+    # duplicate-scatter case) add their contributions there, and only the
+    # final sum is cast back to x's dtype.
+    dxg = sparse_grad_dxg(dy_t, values)  # [..., t, k] f32
+    dx = (jnp.zeros(x.shape, jnp.float32).at[..., idx].add(dxg)
+          .astype(x.dtype))
     xg = jnp.take(x, idx, axis=-1)  # [..., n_tiles, k]
-    dvalues = jnp.einsum("...tk,...tf->tkf", xg, dy_t).astype(values.dtype)
+    dvalues = sparse_grad_dvalues(xg, dy_t, values.dtype)
     return dx, dvalues, None
 
 

@@ -11,6 +11,7 @@ from repro.kernels.conv_gemm.ops import (  # noqa: F401
     conv2d_colwise_sparse,
     conv2d_fused,
     conv2d_fused_banded,
+    conv2d_sparse,
     conv2d_two_kernel,
     conv2d_two_kernel_pipelined,
     conv2d_xla_ref,

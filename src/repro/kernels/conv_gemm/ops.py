@@ -33,8 +33,11 @@ from repro.core.pruning import SparsityConfig, colwise_nm_mask
 from repro.kernels.colwise_nm.ops import (
     colwise_nm_matmul_strips,
     colwise_nm_matmul_strips_pipelined,
+    sparse_grad_dvalues,
+    sparse_grad_dxg,
 )
 from repro.kernels.colwise_nm.ref import colwise_nm_matmul_ref
+from repro.kernels.im2col_pack.kernel import tap_coords
 from repro.kernels.conv_gemm.kernel import (
     band_plan,
     conv2d_fused_banded_pallas,
@@ -218,6 +221,114 @@ def conv2d_xla_ref(
     return y.T.reshape(o, b, ho, wo)
 
 
+# ---------------------------------------------------------------------------
+# Differentiable dispatched sparse conv — the conv twin of colwise_nm's VJP
+# ---------------------------------------------------------------------------
+
+
+def _conv_plan_forward(x_cnhw, values, idx, kh, kw, stride, pad, v, impl):
+    """Dispatch-resolved forward: exactly what ``conv_apply`` ran before the
+    VJP existed — the profiled plan (fused / banded / two-kernel pipelined /
+    XLA, any rung) for this conv shape, or the ``impl``-forced candidate."""
+    from repro import dispatch as _dispatch
+
+    c, b, h, w = x_cnhw.shape
+    n_tiles, k_kept, tile = (int(s) for s in values.shape)
+    key = _dispatch.conv_key(
+        c, h, w, n_tiles * tile, kh, kw, stride, pad, k_kept, tile,
+        v=v, dtype=x_cnhw.dtype, batch=b, phase=_dispatch.current_phase())
+    spec = _dispatch.best_impl(key, param_keys=("values", "idx"), force=impl)
+    return spec.apply({"values": values, "idx": idx}, x_cnhw,
+                      kh=kh, kw=kw, stride=stride, pad=pad, v=v)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8))
+def _conv_sparse(x_cnhw, values, idx, kh, kw, stride, pad, v, impl):
+    return _conv_plan_forward(x_cnhw, values, idx, kh, kw, stride, pad, v,
+                              impl)
+
+
+def _conv_fwd(x_cnhw, values, idx, kh, kw, stride, pad, v, impl):
+    from repro import dispatch as _dispatch
+
+    # grad tracing re-enters the call site through this rule; dispatch must
+    # resolve from the DB / heuristic only — never wall-clock candidates from
+    # inside a gradient trace (see dispatch.no_profile_scope)
+    with _dispatch.no_profile_scope():
+        y = _conv_plan_forward(x_cnhw, values, idx, kh, kw, stride, pad, v,
+                               impl)
+    return y, (x_cnhw, values, idx)
+
+
+def _conv_bwd(kh, kw, stride, pad, v, impl, res, dy):
+    """Backward of the GEMM-view conv ``y[t*T+f, p] = sum_j values[t, j, f] *
+    X_im2col[idx[t, j], p]``, computed without ever materializing the im2col
+    matrix: the same :func:`tap_coords` index arithmetic the forward kernels
+    gather with is reused to
+
+      * gather the kept im2col rows from the map (``xg``) for ``dvalues``
+        (gathered-activation x dy einsum, f32 accumulation), and
+      * scatter-add ``dx`` back through the kept (kh, kw, c) taps — the
+        transposed-conv scatter, accumulated in f32 (output positions whose
+        receptive fields overlap, and tiles sharing a kept row, collide).
+
+    Runs as XLA gather/scatter: the forward is the latency-critical path the
+    paper optimizes; this backward appears only in sparse finetuning.
+    """
+    x, values, idx = res
+    c, b, h, w = x.shape
+    o, _, ho, wo = dy.shape
+    n_pos = b * ho * wo
+    n_tiles, k_kept, tile = values.shape
+    k_of = idx // c   # [n_tiles, k_kept] kernel-tap index ikh*kw + ikw
+    c_of = idx % c    # [n_tiles, k_kept] input channel
+    # coordinates with the flattened output position leading: [P, t, k]
+    p = jnp.arange(n_pos, dtype=jnp.int32)[:, None, None]
+    valid, bc, ihc, iwc = tap_coords(
+        p, ikh=(k_of // kw)[None], ikw=(k_of % kw)[None], stride=stride,
+        pad=pad, b=b, h=h, w=w, ho=ho, wo=wo)
+    fidx = ((c_of[None] * b + bc) * h + ihc) * w + iwc  # [P, t, k] into CNHW
+    dy_t = dy.reshape(o, n_pos).T.reshape(n_pos, n_tiles, tile)  # [P, t, f]
+
+    xg = jnp.where(valid, jnp.take(x.reshape(-1), fidx), 0)  # [P, t, k]
+    dvalues = sparse_grad_dvalues(xg, dy_t, values.dtype)
+
+    dxg = sparse_grad_dxg(dy_t, values)  # [P, t, k] f32
+    dx = (jnp.zeros((c * b * h * w,), jnp.float32)
+          .at[fidx.reshape(-1)]
+          .add(jnp.where(valid, dxg, 0).reshape(-1))
+          .reshape(c, b, h, w).astype(x.dtype))
+    return dx, dvalues, None
+
+
+_conv_sparse.defvjp(_conv_fwd, _conv_bwd)
+
+
+def conv2d_sparse(
+    x_cnhw: jax.Array,
+    values: jax.Array,
+    idx: jax.Array,
+    *,
+    kh: int,
+    kw: int,
+    stride: int = 1,
+    pad: int = 0,
+    v: int = 128,
+    impl: Optional[str] = None,
+) -> jax.Array:
+    """Differentiable dispatched sparse conv (the conv twin of
+    ``colwise_nm``'s custom VJP).
+
+    Forward is the dispatch-resolved execution plan — whichever rung of the
+    conv plan ladder the profile DB / heuristic picks for this shape (or the
+    ``impl``-forced candidate).  Backward computes ``dx`` via the
+    transposed-conv scatter over the kept (kh, kw, c) taps and ``dvalues``
+    via the im2col-gather x dy einsum, both f32-accumulated; ``idx`` gets no
+    cotangent.  Returns CNHW output [O, B, Ho, Wo].
+    """
+    return _conv_sparse(x_cnhw, values, idx, kh, kw, stride, pad, v, impl)
+
+
 def conv2d_colwise_sparse(
     x_cnhw: jax.Array,
     values: jax.Array,
@@ -234,21 +345,13 @@ def conv2d_colwise_sparse(
     ``use_pallas=None`` (the default) consults ``repro.dispatch``: the
     registered conv candidates (fused megakernel geometry variants, two-kernel
     strip-major, XLA reference) are resolved per shape from the profile DB /
-    platform heuristic.  ``use_pallas=True`` forces the two-kernel Pallas
-    plan, ``False`` the XLA reference plan.  Returns CNHW output
-    [O, B, Ho, Wo].
+    platform heuristic, via the differentiable :func:`conv2d_sparse` wrapper.
+    ``use_pallas=True`` forces the two-kernel Pallas plan, ``False`` the XLA
+    reference plan.  Returns CNHW output [O, B, Ho, Wo].
     """
     if use_pallas is None:
-        from repro import dispatch as _dispatch
-
-        c, b, h, w = x_cnhw.shape
-        n_tiles, k_kept, tile = values.shape
-        key = _dispatch.conv_key(c, h, w, n_tiles * tile, kh, kw, stride, pad,
-                                 k_kept, tile, v=v, dtype=x_cnhw.dtype,
-                                 batch=b, phase=_dispatch.current_phase())
-        spec = _dispatch.best_impl(key, param_keys=("values", "idx"))
-        return spec.apply({"values": values, "idx": idx}, x_cnhw,
-                          kh=kh, kw=kw, stride=stride, pad=pad, v=v)
+        return conv2d_sparse(x_cnhw, values, idx, kh=kh, kw=kw, stride=stride,
+                             pad=pad, v=v)
     if use_pallas:
         return conv2d_two_kernel(x_cnhw, values, idx, kh=kh, kw=kw,
                                  stride=stride, pad=pad, v=v)

@@ -1,4 +1,8 @@
-from repro.kernels.im2col_pack.kernel import im2col_pack_pallas  # noqa: F401
+from repro.kernels.im2col_pack.kernel import (  # noqa: F401
+    im2col_pack_pallas,
+    strip_tap_coords,
+    tap_coords,
+)
 from repro.kernels.im2col_pack.ops import (  # noqa: F401
     im2col_only,
     im2col_pack,

@@ -32,18 +32,20 @@ from repro.kernels.pltpu_compat import COMPILER_PARAMS as _COMPILER_PARAMS
 from repro.kernels.im2col_pack.ref import out_size
 
 
-def strip_tap_coords(s, *, v, ikh, ikw, stride, pad, b, h, w, ho, wo,
-                     band_origin=None, band_rows=None):
-    """Source coordinates of strip ``s``'s V output positions at kernel tap
-    (ikh, ikw) — THE im2col index arithmetic, shared by this pack kernel and
-    the conv megakernels (``conv_gemm/kernel.py``) so the stride/pad/boundary
-    semantics cannot drift between them.
+def tap_coords(p, *, ikh, ikw, stride, pad, b, h, w, ho, wo,
+               band_origin=None, band_rows=None):
+    """Source coordinates of flat output positions ``p`` at kernel tap
+    (ikh, ikw) — THE im2col index arithmetic, shared by this pack kernel, the
+    conv megakernels (``conv_gemm/kernel.py``) and the conv backward's
+    transposed-conv scatter (``conv_gemm/ops.py``) so the stride/pad/boundary
+    semantics cannot drift between forward and gradient.
 
-    ``ikh``/``ikw`` may be scalars (one tap, -> [v] outputs) or broadcast
-    arrays (e.g. [block_k, 1] for a block of kept rows, -> [block_k, v]).
-    Returns ``(valid, bc, ihc, iwc)``: the out-of-map / ragged-strip mask and
-    clamped (always in-bounds) batch/row/col gather coordinates; ``bc`` stays
-    [v] (positions do not depend on the tap).
+    ``p`` is any int32 array of flattened ``(batch, oh, ow)`` output
+    positions; ``ikh``/``ikw`` broadcast against it (scalars for one tap,
+    or e.g. [block_k, 1] against a [v] strip of positions).  Returns
+    ``(valid, bc, ihc, iwc)``: the out-of-map / past-the-end mask and
+    clamped (always in-bounds) batch/row/col gather coordinates; ``bc``
+    keeps ``p``'s shape (positions do not depend on the tap).
 
     Band mode (``band_origin``/``band_rows`` set): for kernels that keep only
     a row band of the feature map resident (the banded megakernel), the
@@ -53,7 +55,6 @@ def strip_tap_coords(s, *, v, ikh, ikw, stride, pad, b, h, w, ho, wo,
     returns ``(valid, rowc, iwc)``.  ``band_origin`` may be a traced scalar
     (it is derived from the grid position inside the kernel).
     """
-    p = s * v + jax.lax.iota(jnp.int32, v)  # flat output positions of strip
     n_pos = b * ho * wo
     bb = p // (ho * wo)
     rem = p % (ho * wo)
@@ -68,6 +69,19 @@ def strip_tap_coords(s, *, v, ikh, ikw, stride, pad, b, h, w, ho, wo,
         return (valid, jnp.clip(g, 0, band_rows - 1), jnp.clip(iw, 0, w - 1))
     return (valid, jnp.clip(bb, 0, b - 1), jnp.clip(ih, 0, h - 1),
             jnp.clip(iw, 0, w - 1))
+
+
+def strip_tap_coords(s, *, v, ikh, ikw, stride, pad, b, h, w, ho, wo,
+                     band_origin=None, band_rows=None):
+    """Source coordinates of strip ``s``'s V output positions at kernel tap
+    (ikh, ikw): :func:`tap_coords` over ``p = s*v + iota(v)`` — the strip
+    view the Pallas kernels consume (one [v]-wide position vector per grid
+    step).  See :func:`tap_coords` for the returned tuple and band mode.
+    """
+    p = s * v + jax.lax.iota(jnp.int32, v)  # flat output positions of strip
+    return tap_coords(p, ikh=ikh, ikw=ikw, stride=stride, pad=pad, b=b, h=h,
+                      w=w, ho=ho, wo=wo, band_origin=band_origin,
+                      band_rows=band_rows)
 
 
 def _kernel(

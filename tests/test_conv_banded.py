@@ -383,7 +383,7 @@ class TestConvAwarePlanParams:
         dense, _ = unbox_tree(conv_init(jax.random.PRNGKey(6), 8, 16, 3, 3,
                                         SparsityConfig()))
         comp = compress_conv_layer(dense, 3, 3, self.CFG)
-        assert [int(v) for v in comp["conv_geom"]] == [3, 3, 8]
+        assert [int(v) for v in comp["conv_geom"].value] == [3, 3, 8]
         ops = [op for _, op, _ in dispatch.iter_op_layers({"l": comp})]
         assert ops == ["conv"]
 

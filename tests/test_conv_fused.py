@@ -280,7 +280,9 @@ class TestConvLayerAbstraction:
         cfg = SparsityConfig()
         dense, _ = unbox_tree(conv_init(jax.random.PRNGKey(6), 8, 16, 3, 3,
                                         cfg))
-        comp = compress_conv_layer(dense, 3, 3, self.CFG)
+        # compress_conv_layer returns Boxed leaves (same contract as
+        # conv_init); apply consumes the unboxed values
+        comp, _ = unbox_tree(compress_conv_layer(dense, 3, 3, self.CFG))
         x = jax.random.normal(jax.random.PRNGKey(7), (8, 1, 8, 8))
         y = conv_apply(comp, x, kh=3, kw=3, pad=1)
         wmat = dense["w"].reshape(16, -1).T
