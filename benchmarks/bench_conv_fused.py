@@ -31,6 +31,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import subprocess
 import time
 from pathlib import Path
 
@@ -40,7 +41,9 @@ import jax.numpy as jnp
 from benchmarks.timing import row, time_fn
 from repro import dispatch
 from repro.core import SparsityConfig
-from repro.dispatch import REGISTRY
+from repro.dispatch import REGISTRY, env_fingerprint
+from repro.obs import metrics as _om
+from repro.obs import trace as _ot
 from repro.kernels.conv_gemm.ops import (
     banded_bytes_moved,
     compress_conv_weights,
@@ -148,7 +151,8 @@ def measure(iters: int = 5, quick: bool = False):
                 continue  # a real TPU could not run this plan on this shape
             f = jax.jit(lambda x, fn=fn: fn(
                 x, values, idx, kh=k, kw=k, stride=stride, pad=pad, v=V))
-            entry[plan] = time_fn(f, x, iters=iters, warmup=1)
+            entry[plan] = time_fn(f, x, iters=iters, warmup=1,
+                                  name=f"conv_fused.{name}.{plan}")
         if "fused" in entry:
             entry["fused_speedup_vs_two_kernel"] = (
                 entry["two_kernel"] / entry["fused"])
@@ -169,6 +173,17 @@ def measure(iters: int = 5, quick: bool = False):
                                         ho, ho, V, hb, o, 4)
             for hb in (1, 2, 4)
         }
+        # analytic data-movement counters on the obs registry (no-ops while
+        # REPRO_OBS is off): a trace of a bench run carries the model-side
+        # bytes next to the measured wall times
+        _om.counter("bench.conv.bytes_moved_fused").inc(
+            entry["bytes_moved_fused"])
+        _om.counter("bench.conv.bytes_moved_unfused").inc(
+            entry["bytes_moved_unfused"])
+        _ot.instant("bench.conv.bytes_moved", layer=name,
+                    fused=entry["bytes_moved_fused"],
+                    unfused=entry["bytes_moved_unfused"],
+                    banded_hb2=entry["bytes_moved_banded"]["2"])
         results[name] = entry
     return results
 
@@ -195,11 +210,28 @@ def run(iters: int = 5, quick: bool = False):
     return out
 
 
+HISTORY_CAP = 20  # trajectory points kept; beyond this, oldest runs drop
+
+
+def _git_rev() -> str:
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            cwd=Path(__file__).resolve().parent, capture_output=True,
+            text=True, timeout=5, check=True).stdout.strip() or "unknown"
+    except Exception:  # noqa: BLE001 — not a git checkout / git missing
+        return "unknown"
+
+
 def _write_json(results, iters, quick=False):
     """Append this run to BENCH_conv.json.  A FULL run becomes the new
     top-level payload (back-compat with readers of the PR-3 schema) and the
     previous top-level run is pushed onto ``history`` — the perf trajectory
-    across PRs.  A ``--quick`` run (the CI smoke) only refreshes the
+    across PRs, capped at :data:`HISTORY_CAP` entries so the artifact cannot
+    grow without bound.  Every run is stamped with the dispatch-layer
+    environment fingerprint and the git revision, so trajectory points from
+    different machines/commits are distinguishable instead of silently
+    comparable.  A ``--quick`` run (the CI smoke) only refreshes the
     ``smoke`` section of the existing payload: it proves the plans still run
     without replacing a real trajectory point with 2-layer/3-iter noise or
     growing ``history`` on every CI invocation."""
@@ -219,6 +251,8 @@ def _write_json(results, iters, quick=False):
         "band_hb": BAND_HB,
         "iters": iters,
         "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
+        "git_rev": _git_rev(),
+        "fingerprint": env_fingerprint(),
         "layers": results,
     }
     if quick and old is not None and "layers" in old:
@@ -231,6 +265,7 @@ def _write_json(results, iters, quick=False):
             history = old.pop("history", [])
             old.pop("smoke", None)
             history.append(old)
+        history = history[-HISTORY_CAP:]
         payload = dict(run, history=history)
         note = f"{len(history)} prior run(s) kept in history"
     path.write_text(json.dumps(payload, indent=1))

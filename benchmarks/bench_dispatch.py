@@ -57,7 +57,8 @@ def run(iters: int = 5):
             fixed_us = {}
             for spec in REGISTRY.feasible(key, param_keys=("values", "idx")):
                 fn = jax.jit(lambda x, s=spec: s.apply(params, x))
-                fixed_us[spec.name] = time_fn(fn, x, iters=iters, warmup=1)
+                fixed_us[spec.name] = time_fn(fn, x, iters=iters, warmup=1,
+                                              name=f"dispatch.{name}.{spec.name}")
                 out.append(row(f"dispatch.{name}.{spec.name}",
                                fixed_us[spec.name],
                                f"P={x.shape[0]} K={meta.d_in} O={meta.d_out}"))
@@ -70,7 +71,8 @@ def run(iters: int = 5):
                 spec = dispatch.best_impl(key, param_keys=("values", "idx"))
                 return spec.apply(params, x)
 
-            t_disp = time_fn(jax.jit(dispatched), x, iters=iters, warmup=1)
+            t_disp = time_fn(jax.jit(dispatched), x, iters=iters, warmup=1,
+                             name=f"dispatch.{name}.dispatched")
             best_fixed = min(fixed_us.values())
             out.append(row(
                 f"dispatch.{name}.dispatched", t_disp,

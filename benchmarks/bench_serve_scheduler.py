@@ -22,6 +22,7 @@ import numpy as np
 
 from benchmarks.timing import row
 from repro.configs import smoke_config
+from repro.obs import trace as _ot
 from repro.core.pruning import SparsityConfig
 from repro.models import registry as reg
 from repro.serve import (
@@ -92,11 +93,13 @@ def run(iters: int = 3):
     _run_static(engine, trace)
     _run_sched(engine, trace)
     best_static = best_sched = None
-    for _ in range(max(1, iters - 1)):
-        u_s, t_s = _run_static(engine, trace)
+    for i in range(max(1, iters - 1)):
+        with _ot.span("bench.serve_static", rep=i):
+            u_s, t_s = _run_static(engine, trace)
         if best_static is None or t_s < best_static[1]:
             best_static = (u_s, t_s)
-        u_c, t_c, p50, p99 = _run_sched(engine, trace)
+        with _ot.span("bench.serve_sched", rep=i):
+            u_c, t_c, p50, p99 = _run_sched(engine, trace)
         if best_sched is None or t_c < best_sched[1]:
             best_sched = (u_c, t_c, p50, p99)
 

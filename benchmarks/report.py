@@ -184,6 +184,58 @@ def deployed_table(base: Dict, opt: Dict, caption: str) -> List[str]:
     return lines
 
 
+def metrics_table(snapshot: Dict, caption: str = "Obs metrics") -> List[str]:
+    """Render a ``repro.obs`` metrics snapshot ({counters, gauges,
+    histograms}) as a markdown table; histograms show count + p50/p99."""
+    lines = [f"\n### {caption}\n",
+             "| metric | kind | value |", "|---|---|---|"]
+    for name in sorted(snapshot.get("counters", {})):
+        lines.append(f"| {name} | counter | {snapshot['counters'][name]:g} |")
+    for name in sorted(snapshot.get("gauges", {})):
+        lines.append(f"| {name} | gauge | {snapshot['gauges'][name]:g} |")
+    for name in sorted(snapshot.get("histograms", {})):
+        h = snapshot["histograms"][name]
+        lines.append(f"| {name} | histogram | n={h['count']} "
+                     f"p50={h['p50']:.4g} p99={h['p99']:.4g} |")
+    return lines
+
+
+def conv_trajectory_table(path: Path = Path("BENCH_conv.json")) -> List[str]:
+    """Render the conv perf-trajectory artifact: one row per recorded run
+    (history oldest-first, current run last) with per-layer fused/two_kernel
+    timings, stamped with timestamp + git rev + backend fingerprint."""
+    if not path.exists():
+        return []
+    try:
+        cur = json.loads(path.read_text())
+    except json.JSONDecodeError:
+        return []
+    if not isinstance(cur, dict) or "layers" not in cur:
+        return []
+    runs = [r for r in cur.get("history", []) if isinstance(r, dict)] + [cur]
+    lines = [
+        "\n### Conv plan trajectory (BENCH_conv.json)\n",
+        "| timestamp | git rev | backend | layer | fused µs | banded µs | "
+        "two_kernel µs | xla µs |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+
+    def us(entry, plan):
+        v = entry.get(plan)
+        return f"{v:.0f}" if isinstance(v, (int, float)) else "—"
+
+    for r in runs:
+        ts = r.get("timestamp", "?")
+        rev = r.get("git_rev", "?")
+        backend = r.get("backend", "?")
+        for layer, entry in sorted(r.get("layers", {}).items()):
+            lines.append(
+                f"| {ts} | {rev} | {backend} | {layer} "
+                f"| {us(entry, 'fused')} | {us(entry, 'banded')} "
+                f"| {us(entry, 'two_kernel')} | {us(entry, 'xla')} |")
+    return lines
+
+
 def main():
     sp = load("pod16x16", 50)
     mp = load("pod2x16x16", 50)
@@ -202,6 +254,7 @@ def main():
         out += roofline_table(dense, "Roofline, single pod (16×16), dense baseline")
     if mp:
         out += dryrun_table(mp, "Dry-run, multi-pod (2×16×16) — proves the pod axis shards")
+    out += conv_trajectory_table()
     print("\n".join(out))
 
 

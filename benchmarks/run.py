@@ -69,7 +69,15 @@ def main(argv=None) -> None:
                     help="smoke subset with few iterations (CI mode)")
     ap.add_argument("--only", default=None, metavar="NAME",
                     help="run a single benchmark module by name")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="enable the obs layer and write a Perfetto-loadable "
+                         "Chrome trace of the whole run to PATH")
     args = ap.parse_args(argv)
+
+    if args.trace:
+        from repro import obs
+
+        obs.set_enabled(True)
 
     modules = _modules()
     if args.only:
@@ -95,6 +103,15 @@ def main(argv=None) -> None:
         except Exception:  # noqa: BLE001
             failures += 1
             print(f"{name}.ERROR,0.0,{traceback.format_exc(limit=1).splitlines()[-1]}")
+    if args.trace:
+        from benchmarks.report import metrics_table
+        from repro import obs
+
+        n = obs.dump_chrome_trace(args.trace,
+                                  metadata={"metrics": obs.snapshot()})
+        print(f"# trace: wrote {n} events to {args.trace}", file=sys.stderr)
+        for line in metrics_table(obs.snapshot()):
+            print(line, file=sys.stderr)
     if failures:
         sys.exit(1)
 

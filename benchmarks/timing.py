@@ -1,26 +1,51 @@
-"""Wall-clock timing helper for the benchmark harness."""
+"""Wall-clock timing helper for the benchmark harness.
+
+Every bench that times through :func:`time_fn` with a ``name`` emits the
+same obs trace schema — a ``bench.<name>`` span whose closing event carries
+the median ``wall_us`` plus a ``bench.<name>.us`` gauge — so a single
+``--trace`` run of the harness produces one uniformly-shaped Perfetto
+timeline across all benchmark modules (no-ops while REPRO_OBS is off).
+"""
 from __future__ import annotations
 
 import time
-from typing import Callable
+from typing import Callable, Optional
 
 import jax
 
+from repro.obs import metrics as _om
+from repro.obs import trace as _ot
 
-def time_fn(fn: Callable, *args, iters: int = 20, warmup: int = 3) -> float:
-    """Median wall time per call in microseconds (blocks on device results)."""
+
+def time_fn(fn: Callable, *args, iters: int = 20, warmup: int = 3,
+            name: Optional[str] = None) -> float:
+    """Median wall time per call in microseconds (blocks on device results).
+
+    With ``name``, the measurement loop runs inside a ``bench.<name>`` obs
+    span and the median is recorded on a ``bench.<name>.us`` gauge.
+    """
     for _ in range(warmup):
         out = fn(*args)
         jax.block_until_ready(out)
-    times = []
-    for _ in range(iters):
-        t0 = time.perf_counter()
-        out = fn(*args)
-        jax.block_until_ready(out)
-        times.append(time.perf_counter() - t0)
-    times.sort()
-    return times[len(times) // 2] * 1e6
+    with _ot.span(f"bench.{name}" if name else "bench.time_fn",
+                  iters=iters) as sp:
+        times = []
+        for _ in range(iters):
+            t0 = time.perf_counter()
+            out = fn(*args)
+            jax.block_until_ready(out)
+            times.append(time.perf_counter() - t0)
+        times.sort()
+        med_us = times[len(times) // 2] * 1e6
+        sp.set(wall_us=round(med_us, 1))
+    if name:
+        _om.gauge(f"bench.{name}.us").set(med_us)
+    return med_us
 
 
 def row(name: str, us: float, derived: str = "") -> str:
+    """One CSV result line; also mirrored onto a ``bench.<name>.us`` gauge
+    and a ``bench.row`` instant so trace files carry the table contents."""
+    _om.gauge(f"bench.{name}.us").set(us)
+    _ot.instant("bench.row", bench=name, us=round(us, 1), derived=derived)
     return f"{name},{us:.1f},{derived}"

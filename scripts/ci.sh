@@ -12,6 +12,15 @@ echo "== serve scheduler smoke =="
 python -m repro.launch.serve --arch smollm-360m --smoke --continuous \
     --requests 6 --slots 3 --prompt-len 12 --new-tokens 8 --prefill-chunk 8
 
+echo "== obs trace smoke (serve --trace -> Perfetto-loadable JSON) =="
+OBS_TRACE="$(mktemp -t repro_obs_XXXXXX.json)"
+trap 'rm -f "$OBS_TRACE"' EXIT
+python -m repro.launch.serve --arch smollm-360m --smoke --continuous \
+    --requests 6 --slots 3 --prompt-len 12 --new-tokens 8 --prefill-chunk 8 \
+    --trace "$OBS_TRACE"
+# validator: non-empty, per-lane monotone timestamps, balanced B/E nesting
+python -m repro.obs.validate "$OBS_TRACE"
+
 echo "== sparse finetune smoke (conv VJP backward, interpret mode) =="
 python -c "from repro.models.vision import train_smoke; train_smoke(steps=2)"
 

@@ -36,6 +36,17 @@ from repro.dispatch.registry import (
     linear_key,
     linear_key_from,
 )
+from repro.obs import metrics as _om
+from repro.obs import trace as _ot
+
+# Cached instrument references (module-level, created once): each probe on
+# the resolution path costs one enabled-bool read while observability is off.
+_C_RESOLVE = _om.counter("dispatch.resolves")
+_C_MEMO_HIT = _om.counter("dispatch.memo_hits")
+_C_DB_HIT = _om.counter("dispatch.db_hits")
+_C_DB_MISS = _om.counter("dispatch.db_misses")
+_C_CANDS = _om.counter("dispatch.candidates_considered")
+_C_NO_PROFILE = _om.counter("dispatch.no_profile_resolves")
 
 # legacy per-op defaults used when dispatch is switched off
 _LEGACY_DEFAULT = {"linear": "compressed_xla", "conv": "im2col_sparse_pallas"}
@@ -163,8 +174,24 @@ def best_impl(key: OpKey, *, param_keys: Optional[Iterable[str]] = None,
                 REGISTRY.generation)
     hit = _MEMO.get(memo_key)
     if hit is not None:
+        _C_MEMO_HIT.inc()
         return hit
-    spec = _resolve(key, pk, force, explicit, the_db)
+    _C_RESOLVE.inc()
+    if _NO_PROFILE:
+        _C_NO_PROFILE.inc()
+    with _ot.span("dispatch.resolve", token=key.token, op=key.op,
+                  phase=key.phase) as sp:
+        spec, source = _resolve(key, pk, force, explicit, the_db)
+        sp.set(impl=spec.name, source=source)
+    if _ot.enabled():
+        # every plan decision is auditable: winning impl + geometry token +
+        # why it won + its analytic VMEM footprint, in one instant event
+        _ot.instant(
+            "dispatch.decision", op=key.op, token=key.token,
+            phase=key.phase, impl=spec.name, source=source,
+            geometry="_".join(f"{k}{v}" for k, v in spec.geometry) or "default",
+            backend=spec.backend, vmem_bytes=int(spec.vmem_bytes(key)),
+            no_profile_scope=_NO_PROFILE)
     if len(_MEMO) > 4096:
         _MEMO.clear()
     _MEMO[memo_key] = spec
@@ -172,16 +199,20 @@ def best_impl(key: OpKey, *, param_keys: Optional[Iterable[str]] = None,
 
 
 def _resolve(key: OpKey, pk, force: Optional[str], explicit: bool,
-             db: ProfileDB) -> ImplSpec:
+             db: ProfileDB) -> tuple:
+    """Returns ``(spec, source)`` — the selection plus which rung of the
+    selection order produced it ("forced" | "legacy" | "degraded" | "db" |
+    "profiled" | "heuristic"), recorded in the dispatch-decision event."""
     cands = REGISTRY.candidates(key.op, param_keys=pk)
     if not cands:
         raise TuningError(f"no candidates registered for op {key.op!r} "
                           f"executable from params {sorted(pk or ())}")
+    _C_CANDS.inc(len(cands))
     by_name = {s.name: s for s in cands}
 
     if force is not None:
         if force in by_name:
-            return by_name[force]
+            return by_name[force], "forced"
         registered = force in {s.name for s in REGISTRY.candidates(key.op)}
         if not registered:
             raise KeyError(
@@ -200,30 +231,32 @@ def _resolve(key: OpKey, pk, force: Optional[str], explicit: bool,
     if not dispatch_enabled():
         legacy = _LEGACY_DEFAULT.get(key.op)
         if legacy in by_name:
-            return by_name[legacy]
-        return cands[0]
+            return by_name[legacy], "legacy"
+        return cands[0], "legacy"
 
     feasible = [s for s in cands if s.feasible(key)[0]]
     if not feasible:
         # nothing passes the static predicates: degrade to the candidate with
         # the smallest declared footprint instead of refusing to run
-        return min(cands, key=lambda s: s.vmem_bytes(key))
+        return min(cands, key=lambda s: s.vmem_bytes(key)), "degraded"
 
     rec = db.get(key.token)
     if rec is not None and rec.get("impl") in by_name:
         spec = by_name[rec["impl"]]
         if spec.feasible(key)[0]:
-            return spec
+            _C_DB_HIT.inc()
+            return spec, "db"
+    _C_DB_MISS.inc()
 
     if _profile_on_miss():
         try:
             rec = profile_op(key, db, param_keys=pk)
             if rec["impl"] in by_name:
-                return by_name[rec["impl"]]
+                return by_name[rec["impl"]], "profiled"
         except TuningError:
             pass
 
-    return _heuristic(feasible, key)
+    return _heuristic(feasible, key), "heuristic"
 
 
 def ensure_profiled(key: OpKey, *, param_keys=None, db: Optional[ProfileDB] = None,
@@ -367,32 +400,35 @@ def plan_params(params, *, batch_hint: int = 8, db: Optional[ProfileDB] = None,
         plan[key.token] = best_impl(
             key, param_keys=("values", "idx"), db=the_db).name
 
-    for path, op, info in iter_op_layers(params):
-        values, idx = info["values"], info["idx"]
-        n_tiles, k_kept, tile = (int(s) for s in values.shape[-3:])
-        dtype = getattr(values, "dtype", "float32")
-        if op == "conv":
-            hint = _match_conv_hint(conv_hints, path)
-            if hint is None:
-                continue  # no map-shape hint: cannot form the conv token
-            kh, kw, c = info["kh"], info["kw"], info["c_in"]
-            h = int(hint["h"])
-            key = conv_key(
-                c, h, int(hint.get("w", h)), n_tiles * tile, kh, kw,
-                int(hint.get("stride", 1)), int(hint.get("pad", kh // 2)),
-                k_kept, tile, v=int(hint.get("v", 128)), dtype=dtype,
-                batch=int(hint.get("batch", 1)))
-            _plan_key(key)
-            continue
-        # d_in is not stored in the compressed layout; the max kept index
-        # bounds it from below, and OpKey buckets d_in to a power of two, so
-        # this lands in the trace-time token whenever the kept support
-        # reaches the top half of the reduction dim (essentially always for
-        # magnitude-pruned weights).  If it doesn't, the plan warms a token
-        # the forward never looks up and that layer falls back to the
-        # heuristic — a missed warm-up, never a wrong result.
-        d_in = int(idx.max()) + 1 if getattr(idx, "size", 0) else k_kept
-        for ph, rows in hints.items():
-            _plan_key(linear_key(rows, d_in, n_tiles * tile, k_kept, tile,
-                                 dtype=dtype, phase=ph))
+    with _ot.span("dispatch.plan_params", profile=bool(profile),
+                  phases=",".join(sorted(hints))) as sp:
+        for path, op, info in iter_op_layers(params):
+            values, idx = info["values"], info["idx"]
+            n_tiles, k_kept, tile = (int(s) for s in values.shape[-3:])
+            dtype = getattr(values, "dtype", "float32")
+            if op == "conv":
+                hint = _match_conv_hint(conv_hints, path)
+                if hint is None:
+                    continue  # no map-shape hint: cannot form the conv token
+                kh, kw, c = info["kh"], info["kw"], info["c_in"]
+                h = int(hint["h"])
+                key = conv_key(
+                    c, h, int(hint.get("w", h)), n_tiles * tile, kh, kw,
+                    int(hint.get("stride", 1)), int(hint.get("pad", kh // 2)),
+                    k_kept, tile, v=int(hint.get("v", 128)), dtype=dtype,
+                    batch=int(hint.get("batch", 1)))
+                _plan_key(key)
+                continue
+            # d_in is not stored in the compressed layout; the max kept index
+            # bounds it from below, and OpKey buckets d_in to a power of two,
+            # so this lands in the trace-time token whenever the kept support
+            # reaches the top half of the reduction dim (essentially always
+            # for magnitude-pruned weights).  If it doesn't, the plan warms a
+            # token the forward never looks up and that layer falls back to
+            # the heuristic — a missed warm-up, never a wrong result.
+            d_in = int(idx.max()) + 1 if getattr(idx, "size", 0) else k_kept
+            for ph, rows in hints.items():
+                _plan_key(linear_key(rows, d_in, n_tiles * tile, k_kept, tile,
+                                     dtype=dtype, phase=ph))
+        sp.set(planned=len(plan))
     return plan

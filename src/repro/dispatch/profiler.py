@@ -33,6 +33,11 @@ from pathlib import Path
 from typing import Callable, Dict, List, Optional
 
 from repro.dispatch.registry import REGISTRY, VMEM_BYTES, ImplSpec, OpKey
+from repro.obs import metrics as _om
+from repro.obs import trace as _ot
+
+_C_PROFILE_RUNS = _om.counter("dispatch.profile_runs")
+_C_PROFILED_CANDS = _om.counter("dispatch.profiled_candidates")
 
 SCHEMA_VERSION = 2
 DEFAULT_DB_PATH = "artifacts/dispatch_profile.json"
@@ -181,10 +186,22 @@ def profile_op(key: OpKey, db: Optional[ProfileDB] = None, *,
         reasons = {s.name: s.feasible(key)[1] for s in impls}
         raise TuningError(
             f"no feasible candidate for {key.token}: {reasons}")
+    _C_PROFILE_RUNS.inc()
     timings: Dict[str, float] = {}
-    for spec in feasible:
-        timings[spec.name] = median_wall_us(spec.make_bench(key), iters=iters)
-    winner = min(timings, key=timings.get)
+    with _ot.span("dispatch.profile", token=key.token,
+                  candidates=len(feasible)) as psp:
+        for spec in feasible:
+            with _ot.span("dispatch.profile.candidate", impl=spec.name) as sp:
+                timings[spec.name] = median_wall_us(spec.make_bench(key),
+                                                    iters=iters)
+                sp.set(wall_us=timings[spec.name])
+            _C_PROFILED_CANDS.inc()
+            # per-candidate measurement as a first-class event, so a trace
+            # alone reconstructs the whole race, not just the winner
+            _ot.instant("dispatch.candidate_wall", token=key.token,
+                        impl=spec.name, wall_us=timings[spec.name])
+        winner = min(timings, key=timings.get)
+        psp.set(winner=winner, wall_us=timings[winner])
     record = {"impl": winner, "wall_us": timings[winner], "all": timings}
     if db is not None:
         db.put(key.token, record)

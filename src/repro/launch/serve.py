@@ -6,10 +6,13 @@ Static batch (pads every request to the slowest sequence):
         --batch 4 --new-tokens 32 --sparsity 0.5
 
 Continuous batching (slot-based in-flight admission over a synthetic
-mixed-length request trace; --trace prints the admit/retire event log):
+mixed-length request trace).  Bare ``--trace`` prints the admit/retire event
+log; ``--trace out.json`` additionally turns on the observability layer and
+writes a Chrome-trace-event file (dispatch decisions, scheduler iteration
+spans, per-request TTFT/TPOT metrics) loadable in Perfetto:
 
     PYTHONPATH=src python -m repro.launch.serve --arch smollm-360m --smoke \
-        --continuous --requests 12 --slots 4 --trace
+        --continuous --requests 12 --slots 4 --trace out.json
 """
 from __future__ import annotations
 
@@ -18,6 +21,7 @@ import argparse
 import jax
 import numpy as np
 
+from repro import obs
 from repro.configs import get_config, smoke_config
 from repro.core.pruning import SparsityConfig
 from repro.models import registry as reg
@@ -64,7 +68,7 @@ def run_continuous(args) -> None:
         prompt_lens=(max(args.prompt_len // 4, 1), args.prompt_len),
         new_tokens=(max(args.new_tokens // 4, 1), args.new_tokens))
     sched = Scheduler(eng, n_slots=args.slots, prefill_chunk=args.prefill_chunk)
-    log = print if args.trace else None
+    log = print if args.trace == "" else None
     completions = sched.run(trace, log_fn=log)
     stats = sched.stats
     p50, p99 = latency_percentiles(completions)
@@ -74,8 +78,17 @@ def run_continuous(args) -> None:
           f"({stats['generated_tokens']} tokens, "
           f"{stats['decode_steps']} steps); "
           f"latency p50 {p50*1e3:.1f} ms p99 {p99*1e3:.1f} ms")
+    print(f"ttft p50 {stats['ttft_p50_s']*1e3:.1f} ms "
+          f"p99 {stats['ttft_p99_s']*1e3:.1f} ms; "
+          f"tpot p50 {stats['tpot_p50_s']*1e3:.2f} ms "
+          f"p99 {stats['tpot_p99_s']*1e3:.2f} ms")
     for c in completions[:2]:
         print(f"  uid={c.uid}: {c.tokens[:16].tolist()}")
+
+
+def _finish_trace(path: str) -> None:
+    n = obs.dump_chrome_trace(path, metadata={"metrics": obs.snapshot()})
+    print(f"trace: wrote {n} events to {path} (load in ui.perfetto.dev)")
 
 
 def main():
@@ -95,13 +108,23 @@ def main():
     ap.add_argument("--slots", type=int, default=4,
                     help="KV slot count (decode batch width) for --continuous")
     ap.add_argument("--prefill-chunk", type=int, default=16)
-    ap.add_argument("--trace", action="store_true",
-                    help="print per-request admit/retire events")
+    ap.add_argument("--trace", nargs="?", const="", default=None,
+                    metavar="PATH",
+                    help="bare: print per-request admit/retire events; "
+                         "with PATH: enable the obs layer and write a "
+                         "Perfetto-loadable Chrome trace to PATH")
     args = ap.parse_args()
-    if args.continuous:
-        run_continuous(args)
-    else:
-        run_static(args)
+    trace_path = args.trace if args.trace else None
+    if trace_path:
+        obs.set_enabled(True)
+    try:
+        if args.continuous:
+            run_continuous(args)
+        else:
+            run_static(args)
+    finally:
+        if trace_path:
+            _finish_trace(trace_path)
 
 
 if __name__ == "__main__":

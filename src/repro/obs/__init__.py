@@ -1,0 +1,42 @@
+# Runtime observability subsystem: structured tracing (Chrome-trace-event
+# export, Perfetto-loadable) + named metrics (counters/gauges/histograms).
+# Off by default — every probe is a no-op until REPRO_OBS=on or
+# obs.set_enabled(True); see docs/observability.md.
+from repro.obs.metrics import (  # noqa: F401
+    DEFAULT_BUCKETS,
+    REGISTRY,
+    Counter,
+    Gauge,
+    Histogram,
+    Registry,
+    counter,
+    exp_buckets,
+    gauge,
+    histogram,
+    snapshot,
+)
+from repro.obs.trace import (  # noqa: F401
+    configure,
+    current_stack,
+    dropped_events,
+    dump_chrome_trace,
+    enabled,
+    events,
+    instant,
+    now_us,
+    set_enabled,
+    span,
+)
+from repro.obs.validate import (  # noqa: F401
+    TraceValidationError,
+    validate_chrome_trace,
+)
+
+from repro.obs import metrics as _metrics
+from repro.obs import trace as _trace
+
+
+def reset() -> None:
+    """Clear the trace ring buffer AND zero the global metrics registry."""
+    _trace.reset()
+    _metrics.reset()

@@ -28,6 +28,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models import registry as reg
+from repro.obs import trace as _ot
 
 
 @dataclasses.dataclass
@@ -75,13 +76,14 @@ class Engine:
         from repro import dispatch as _dispatch
 
         scfg = self.scfg
-        self.dispatch_plan = _dispatch.plan_params(
-            params, batch_hint=scfg.dispatch_batch_hint,
-            phase_hints={
-                "prefill": scfg.dispatch_batch_hint * scfg.dispatch_seq_hint,
-                "decode": scfg.dispatch_batch_hint,
-            },
-            profile=scfg.profile_dispatch)
+        with _ot.span("engine.build", arch=cfg.name):
+            self.dispatch_plan = _dispatch.plan_params(
+                params, batch_hint=scfg.dispatch_batch_hint,
+                phase_hints={
+                    "prefill": scfg.dispatch_batch_hint * scfg.dispatch_seq_hint,
+                    "decode": scfg.dispatch_batch_hint,
+                },
+                profile=scfg.profile_dispatch)
         self._decode = jax.jit(_phased(reg.decode_fn(cfg), "decode"),
                                donate_argnums=(1,))
         self._prefill = jax.jit(_phased(reg.prefill_fn(cfg), "prefill"))
@@ -167,7 +169,8 @@ class Engine:
         key = jax.random.PRNGKey(scfg.seed)
 
         t0 = time.perf_counter()
-        logits, cache = self.prefill_step(prompts, max_len, extras)
+        with _ot.span("engine.prefill", batch=b, seq=s):
+            logits, cache = self.prefill_step(prompts, max_len, extras)
         t_prefill = time.perf_counter() - t0
 
         out = []
@@ -189,13 +192,18 @@ class Engine:
         key, k0 = jax.random.split(key)
         tok = record(self.sample(logits, k0))
         t1 = time.perf_counter()
-        for i in range(scfg.max_new_tokens - 1):
-            if done.all():
-                break
-            pos = jnp.asarray(s + i, jnp.int32)
-            logits, cache = self.decode_step(cache, tok[:, None], pos)
-            key, kk = jax.random.split(key)
-            tok = record(self.sample(logits, kk))
+        with _ot.span("engine.decode_loop", batch=b,
+                      budget=scfg.max_new_tokens) as dsp:
+            steps = 0
+            for i in range(scfg.max_new_tokens - 1):
+                if done.all():
+                    break
+                pos = jnp.asarray(s + i, jnp.int32)
+                logits, cache = self.decode_step(cache, tok[:, None], pos)
+                key, kk = jax.random.split(key)
+                tok = record(self.sample(logits, kk))
+                steps += 1
+            dsp.set(steps=steps)
         t_decode = time.perf_counter() - t1
         gen = np.stack(out, axis=1)
         return {

@@ -35,8 +35,23 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models import registry as reg
+from repro.obs import metrics as _om
+from repro.obs import trace as _ot
 from repro.serve.engine import Engine
 from repro.serve.kv_slots import SlotPool
+
+# Global-registry mirrors (no-ops while obs is off): the process-wide view a
+# trace file carries, alongside each Scheduler's private always-on registry
+# that backs its ``stats`` property.
+_G_STEPS = _om.counter("serve.decode_steps")
+_G_DECODE_S = _om.counter("serve.decode_s")
+_G_TOKENS = _om.counter("serve.generated_tokens")
+_G_COMPLETED = _om.counter("serve.completed_requests")
+_G_QUEUE = _om.gauge("serve.queue_depth")
+_G_ACTIVE = _om.gauge("serve.slots_active")
+_G_TTFT = _om.histogram("serve.ttft_s")
+_G_TPOT = _om.histogram("serve.tpot_s")
+_G_LATENCY = _om.histogram("serve.latency_s")
 
 
 @dataclasses.dataclass
@@ -132,7 +147,18 @@ class Scheduler:
         self.n_slots = n_slots
         self.max_len = max_len
         self.prefill_chunk = prefill_chunk
-        self.stats: Dict[str, float] = {}
+        # Always-on private metrics registry backing the ``stats`` view —
+        # live counters, so a partially-consumed run_iter generator reports
+        # consistent numbers at any point (and zeros before the first run,
+        # full key set included, instead of the old empty/stale dict).
+        self.metrics = _om.Registry()
+        for name in ("decode_steps", "decode_s", "generated_tokens",
+                     "completed_requests"):
+            self.metrics.counter(name)
+        for name in ("requests", "total_s", "queue_depth", "slots_active"):
+            self.metrics.gauge(name)
+        for name in ("ttft_s", "tpot_s", "latency_s"):
+            self.metrics.histogram(name)
         # Re-plan dispatch for the geometry this scheduler actually traces:
         # chunked prefill runs [1, C]-row operands (C capped by max_len, the
         # same cap run_iter applies) and pool decode [n_slots] rows — the
@@ -162,6 +188,31 @@ class Scheduler:
 
     # ------------------------------------------------------------------
 
+    @property
+    def stats(self) -> Dict[str, float]:
+        """Latency/throughput counters as a derived view over
+        :attr:`metrics` — the pre-obs ad-hoc dict's key set (plus latency
+        percentiles), consistent at ANY point: before the first run it is
+        all-zeros, and while a :meth:`run_iter` generator is partially
+        consumed it reflects the work done so far."""
+        c = self.metrics
+        gen = c.counter("generated_tokens").value
+        dec_s = c.counter("decode_s").value
+        out = {
+            "decode_steps": c.counter("decode_steps").value,
+            "decode_s": dec_s,
+            "total_s": c.gauge("total_s").value,
+            "generated_tokens": gen,
+            "requests": c.gauge("requests").value,
+            "completed_requests": c.counter("completed_requests").value,
+            "decode_tok_s": gen / dec_s if dec_s > 0 else 0.0,
+        }
+        for h in ("ttft_s", "tpot_s", "latency_s"):
+            hist = c.histogram(h)
+            out[f"{h[:-2]}_p50_s"] = hist.percentile(50)
+            out[f"{h[:-2]}_p99_s"] = hist.percentile(99)
+        return out
+
     def run(self, requests: Iterable[Request],
             log_fn: Optional[Callable[[str], None]] = None) -> List[Completion]:
         """Serve every request; returns completions in finish order (see
@@ -173,13 +224,14 @@ class Scheduler:
                  log_fn: Optional[Callable[[str], None]] = None
                  ) -> Iterator[Completion]:
         """Generator form of :meth:`run`: yields each Completion the moment
-        its sequence retires, while later requests are still decoding."""
+        its admit/decode iteration ends, while later requests are still
+        decoding."""
         reqs = list(requests)
         log = log_fn or (lambda _msg: None)
+        m = self.metrics
+        m.reset()
+        m.gauge("requests").set(len(reqs))
         if not reqs:
-            self.stats = {"decode_steps": 0, "decode_s": 0.0, "total_s": 0.0,
-                          "generated_tokens": 0, "requests": 0,
-                          "decode_tok_s": 0.0}
             return
         engine, cfg = self.engine, self.engine.cfg
         needed = max(len(r.prompt) + r.max_new_tokens for r in reqs)
@@ -213,9 +265,13 @@ class Scheduler:
         key = jax.random.PRNGKey(engine.scfg.seed)
         eos = engine.scfg.eos_id
         t0 = time.perf_counter()
-        decode_steps = 0
-        decode_s = 0.0
-        n_generated = 0
+        c_steps = m.counter("decode_steps")
+        c_decode_s = m.counter("decode_s")
+        c_gen = m.counter("generated_tokens")
+        c_done = m.counter("completed_requests")
+        g_total = m.gauge("total_s")
+        h_ttft, h_tpot, h_lat = (m.histogram("ttft_s"), m.histogram("tpot_s"),
+                                 m.histogram("latency_s"))
 
         def retire(idx: int) -> Completion:
             st = inflight.pop(idx)
@@ -224,64 +280,97 @@ class Scheduler:
                 uid=st.req.uid, prompt_len=len(st.req.prompt),
                 tokens=np.asarray(st.tokens, np.int32), t_submit=t0,
                 t_first=st.t_first, t_done=time.perf_counter())
+            # TPOT = inter-token time after the first (TTFT covers that one)
+            tpot = (comp.t_done - comp.t_first) / max(comp.n_generated - 1, 1)
+            h_ttft.observe(comp.ttft_s)
+            h_tpot.observe(tpot)
+            h_lat.observe(comp.latency_s)
+            _G_TTFT.observe(comp.ttft_s)
+            _G_TPOT.observe(tpot)
+            _G_LATENCY.observe(comp.latency_s)
+            c_done.inc()
+            _G_COMPLETED.inc()
+            _ot.instant("serve.retire", uid=comp.uid, slot=idx,
+                        generated=comp.n_generated,
+                        ttft_s=round(comp.ttft_s, 6), tpot_s=round(tpot, 6),
+                        latency_s=round(comp.latency_s, 6))
             log(f"[retire] uid={comp.uid} slot={idx} "
                 f"generated={comp.n_generated} latency={comp.latency_s:.3f}s")
             return comp
 
+        it = 0
         while queue or pool.n_active:
-            # -- admission: chunked prefill into every free slot ----------
-            while queue and pool.n_free:
-                req = queue.pop()
-                slot = pool.alloc(req.uid)
-                logits, cache = self._prefill_into(cache, slot.index,
-                                                   req.prompt, c_w)
-                slot.pos = len(req.prompt)
-                key, k = jax.random.split(key)
-                tok = int(np.asarray(engine.sample(logits, k))[0])
-                n_generated += 1
-                inflight[slot.index] = _InFlight(
-                    req=req, t_first=time.perf_counter(), tokens=[tok])
-                log(f"[admit] uid={req.uid} slot={slot.index} "
-                    f"prompt={len(req.prompt)} budget={req.max_new_tokens}")
-                if (eos is not None and tok == eos) or req.max_new_tokens == 1:
-                    yield retire(slot.index)
-                else:
-                    tok_buf[slot.index] = tok
-            if not pool.n_active:
-                continue  # every admission retired instantly; admit more
+            # Completions are collected per iteration and yielded after the
+            # iteration span closes — an open span across a yield would
+            # interleave with whatever the consumer traces between steps and
+            # break B/E nesting.
+            done_now: List[Completion] = []
+            with _ot.span("serve.iter", it=it) as isp:
+                # -- admission: chunked prefill into every free slot ------
+                while queue and pool.n_free:
+                    req = queue.pop()
+                    with _ot.span("serve.admit", uid=req.uid,
+                                  prompt=len(req.prompt),
+                                  budget=req.max_new_tokens) as asp:
+                        slot = pool.alloc(req.uid)
+                        logits, cache = self._prefill_into(
+                            cache, slot.index, req.prompt, c_w)
+                        slot.pos = len(req.prompt)
+                        key, k = jax.random.split(key)
+                        tok = int(np.asarray(engine.sample(logits, k))[0])
+                        asp.set(slot=slot.index)
+                    c_gen.inc()
+                    _G_TOKENS.inc()
+                    inflight[slot.index] = _InFlight(
+                        req=req, t_first=time.perf_counter(), tokens=[tok])
+                    log(f"[admit] uid={req.uid} slot={slot.index} "
+                        f"prompt={len(req.prompt)} budget={req.max_new_tokens}")
+                    if (eos is not None and tok == eos) or req.max_new_tokens == 1:
+                        done_now.append(retire(slot.index))
+                    else:
+                        tok_buf[slot.index] = tok
+                m.gauge("queue_depth").set(len(queue))
+                m.gauge("slots_active").set(pool.n_active)
+                _G_QUEUE.set(len(queue))
+                _G_ACTIVE.set(pool.n_active)
 
-            # -- one pool-shaped decode step ------------------------------
-            pos_vec = pool.positions()
-            t1 = time.perf_counter()
-            logits, cache = engine.decode_step(
-                cache, jnp.asarray(tok_buf[:, None]), jnp.asarray(pos_vec))
-            key, k = jax.random.split(key)
-            toks = np.asarray(engine.sample(logits, k))
-            decode_s += time.perf_counter() - t1
-            decode_steps += 1
+                if pool.n_active:
+                    # -- one pool-shaped decode step ----------------------
+                    pos_vec = pool.positions()
+                    t1 = time.perf_counter()
+                    with _ot.span("serve.decode", active=pool.n_active) as dsp:
+                        logits, cache = engine.decode_step(
+                            cache, jnp.asarray(tok_buf[:, None]),
+                            jnp.asarray(pos_vec))
+                        key, k = jax.random.split(key)
+                        toks = np.asarray(engine.sample(logits, k))
+                        dt = time.perf_counter() - t1
+                        dsp.set(wall_us=round(dt * 1e6, 1))
+                    c_decode_s.inc(dt)
+                    c_steps.inc()
+                    _G_DECODE_S.inc(dt)
+                    _G_STEPS.inc()
 
-            # -- retire finished sequences, advance the rest --------------
-            for idx in sorted(inflight):
-                st = inflight[idx]
-                pool.advance(idx)  # the step wrote st's fed token at pos
-                tok = int(toks[idx])
-                st.tokens.append(tok)
-                n_generated += 1
-                if ((eos is not None and tok == eos)
-                        or len(st.tokens) >= st.req.max_new_tokens):
-                    yield retire(idx)
-                else:
-                    tok_buf[idx] = tok
+                    # -- retire finished sequences, advance the rest ------
+                    for idx in sorted(inflight):
+                        st = inflight[idx]
+                        pool.advance(idx)  # the step wrote st's fed token
+                        tok = int(toks[idx])
+                        st.tokens.append(tok)
+                        c_gen.inc()
+                        _G_TOKENS.inc()
+                        if ((eos is not None and tok == eos)
+                                or len(st.tokens) >= st.req.max_new_tokens):
+                            done_now.append(retire(idx))
+                        else:
+                            tok_buf[idx] = tok
+                isp.set(retired=len(done_now))
+            g_total.set(time.perf_counter() - t0)
+            for comp in done_now:
+                yield comp
+            it += 1
 
-        total_s = time.perf_counter() - t0
-        self.stats = {
-            "decode_steps": decode_steps,
-            "decode_s": decode_s,
-            "total_s": total_s,
-            "generated_tokens": n_generated,
-            "requests": len(reqs),
-            "decode_tok_s": n_generated / max(decode_s, 1e-9),
-        }
+        g_total.set(time.perf_counter() - t0)
 
     # ------------------------------------------------------------------
 
@@ -297,12 +386,14 @@ class Scheduler:
         s_len = int(len(prompt))
         sub = jax.tree_util.tree_map(lambda a: a[:, slot:slot + 1], cache)
         logits = None
-        for start in range(0, s_len, c_w):
-            chunk = np.asarray(prompt[start:start + c_w], np.int32)[None, :]
-            if chunk.shape[1] < c_w:
-                chunk = np.pad(chunk, ((0, 0), (0, c_w - chunk.shape[1])))
-            logits, sub = self.engine.prefill_chunk_step(
-                sub, chunk, start, with_logits=start + c_w >= s_len)
+        with _ot.span("serve.prefill", slot=slot, prompt=s_len,
+                      chunks=-(-s_len // c_w), chunk_w=c_w):
+            for start in range(0, s_len, c_w):
+                chunk = np.asarray(prompt[start:start + c_w], np.int32)[None, :]
+                if chunk.shape[1] < c_w:
+                    chunk = np.pad(chunk, ((0, 0), (0, c_w - chunk.shape[1])))
+                logits, sub = self.engine.prefill_chunk_step(
+                    sub, chunk, start, with_logits=start + c_w >= s_len)
         last = (s_len - 1) % c_w
         # sub is the last chunk call's jit output (fresh buffers), so
         # donating the pool here can never delete a buffer sub still uses

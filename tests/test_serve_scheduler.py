@@ -339,3 +339,60 @@ class TestEngineFixes:
         # greedy prefix up to EOS matches the unconstrained run
         n0 = int(lens[0])
         np.testing.assert_array_equal(toks[0, :n0], free["tokens"][0, :n0])
+
+
+# ---------------------------------------------------------------------------
+# Stats lifecycle (obs-backed derived view)
+# ---------------------------------------------------------------------------
+
+
+STAT_KEYS = {
+    "decode_steps", "decode_s", "total_s", "generated_tokens", "requests",
+    "completed_requests", "decode_tok_s", "ttft_p50_s", "ttft_p99_s",
+    "tpot_p50_s", "tpot_p99_s", "latency_p50_s", "latency_p99_s",
+}
+
+
+class TestStatsLifecycle:
+    def test_full_key_set_before_first_run(self, engine):
+        """A fresh Scheduler reports the complete all-zeros key set — not the
+        pre-obs empty dict that KeyError'd consumers before run()."""
+        sched = Scheduler(engine, n_slots=2, prefill_chunk=4)
+        stats = sched.stats
+        assert set(stats) == STAT_KEYS
+        assert all(v == 0 for v in stats.values())
+
+    def test_consistent_during_partial_run_iter(self, engine):
+        """stats read mid-generator reflects the work done so far with the
+        same key set, and keeps counting to the final totals."""
+        engine.scfg.max_new_tokens = 8
+        trace = synthetic_trace(5, seed=7, vocab=engine.cfg.vocab_size,
+                                prompt_lens=(3, 10), new_tokens=(2, 8))
+        sched = Scheduler(engine, n_slots=2, prefill_chunk=4)
+        gen = sched.run_iter(trace)
+        first = next(gen)
+        mid = sched.stats
+        assert set(mid) == STAT_KEYS
+        assert mid["requests"] == 5
+        assert mid["completed_requests"] >= 1
+        assert mid["generated_tokens"] >= first.n_generated
+        assert mid["decode_s"] > 0 and mid["decode_tok_s"] > 0
+        rest = list(gen)
+        end = sched.stats
+        assert end["completed_requests"] == 5
+        assert end["generated_tokens"] == first.n_generated + sum(
+            c.n_generated for c in rest)
+        assert end["generated_tokens"] >= mid["generated_tokens"]
+        assert end["latency_p50_s"] > 0 and end["tpot_p50_s"] >= 0
+
+    def test_rerun_resets_counters(self, engine):
+        engine.scfg.max_new_tokens = 4
+        trace = synthetic_trace(3, seed=2, vocab=engine.cfg.vocab_size,
+                                prompt_lens=(3, 8), new_tokens=(2, 4))
+        sched = Scheduler(engine, n_slots=2, prefill_chunk=4)
+        sched.run(trace)
+        a = sched.stats
+        sched.run(trace)
+        b = sched.stats
+        assert a["completed_requests"] == b["completed_requests"] == 3
+        assert b["generated_tokens"] == a["generated_tokens"]  # not 2x
