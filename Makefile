@@ -1,7 +1,7 @@
 PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 export PYTHONPATH
 
-.PHONY: test bench bench-quick bench-conv serve-smoke obs-smoke train-smoke ci
+.PHONY: test bench bench-quick bench-conv serve-smoke serve-smoke-paged obs-smoke train-smoke ci
 
 test:            ## tier-1 test suite
 	python -m pytest -x -q
@@ -19,6 +19,14 @@ serve-smoke:     ## continuous-batching scheduler CLI smoke
 	python -m repro.launch.serve --arch smollm-360m --smoke --continuous \
 	    --requests 6 --slots 3 --prompt-len 12 --new-tokens 8 --prefill-chunk 8
 
+serve-smoke-paged: ## paged-KV scheduler smoke: --trace validated + page gauges
+	@t=$$(mktemp -t repro_paged_XXXXXX.json); \
+	python -m repro.launch.serve --arch smollm-360m --smoke --continuous \
+	    --paged --page-size 8 --requests 6 --slots 3 --prompt-len 12 \
+	    --new-tokens 8 --prefill-chunk 8 --trace $$t \
+	&& python -m repro.obs.validate $$t; \
+	rc=$$?; rm -f $$t; exit $$rc
+
 obs-smoke:       ## serve --trace writes a Chrome trace; validate its schema
 	@t=$$(mktemp -t repro_obs_XXXXXX.json); \
 	python -m repro.launch.serve --arch smollm-360m --smoke --continuous \
@@ -30,4 +38,4 @@ obs-smoke:       ## serve --trace writes a Chrome trace; validate its schema
 train-smoke:     ## 2-step resnet-tiny sparse finetune (conv VJP backward path)
 	python -c "from repro.models.vision import train_smoke; train_smoke(steps=2)"
 
-ci: test serve-smoke obs-smoke train-smoke bench-quick bench-conv  ## what scripts/ci.sh runs
+ci: test serve-smoke serve-smoke-paged obs-smoke train-smoke bench-quick bench-conv  ## what scripts/ci.sh runs

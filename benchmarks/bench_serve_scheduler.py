@@ -1,5 +1,6 @@
 """Continuous-batching scheduler vs the static-batch engine on one
-mixed-length synthetic request trace (CPU smoke config).
+mixed-length synthetic request trace (CPU smoke config), plus the paged-KV
+serving-memory tier (``repro.serve.kv_pages``) vs the contiguous slot pool.
 
 The static engine pads every request in a batch to the longest prompt and
 keeps decoding until the batch's largest token budget is exhausted, so
@@ -8,14 +9,48 @@ scheduler retires sequences the moment they finish and admits the next
 request into the freed KV slot, so (useful tokens) / (decode wall-clock) —
 the number reported here — should never be lower than the static loop's.
 
+The paged rows compare the two serving-memory disciplines at the SAME
+physical KV budget (the contiguous pool's own footprint,
+``n_slots * max_len`` rows):
+
+  * contiguous reserves ``max_len`` rows per slot up front, so its
+    high-water-mark IS the whole pool and its admission capacity is
+    ``budget_rows // max_len`` regardless of actual request sizes;
+  * paged reserves ``ceil((prompt + budget) / page_size)`` pages per
+    request, so short requests stop paying for the longest one — the
+    measured high-water-mark (``pages_peak * page_size`` rows) is lower and
+    the admission capacity (max concurrent requests the budget can hold) is
+    strictly higher on any mixed-length trace;
+  * contiguous chunked prefill pads every prompt to a multiple of the chunk
+    width and runs attention over the padding; packed prefill concatenates
+    the admitted prompts into one exact-shape stream — zero padded-token
+    attention FLOPs.
+
 Rows:
-  serve_static_decode  us per *useful* token, decode tok/s (static batches)
-  serve_sched_decode   us per useful token, decode tok/s (continuous)
-  serve_sched_speedup  —, scheduler/static useful-throughput ratio
-  serve_sched_p50      request latency p50 (us), seconds
-  serve_sched_p99      request latency p99 (us), seconds
+  serve_static_decode   us per *useful* token, decode tok/s (static batches)
+  serve_sched_decode    us per useful token, decode tok/s (continuous)
+  serve_sched_speedup   —, scheduler/static useful-throughput ratio
+  serve_sched_p50       request latency p50 (us), seconds
+  serve_sched_p99       request latency p99 (us), seconds
+  serve_paged_decode    us per useful token, decode tok/s (paged KV + packed
+                        prefill)
+  serve_paged_p50/p99   request latency percentiles, paged scheduler
+  serve_kv_hwm          contiguous vs paged KV bytes high-water-mark
+  serve_admission_capacity  max concurrent requests at the fixed KV budget
+  serve_prefill_pad_tokens  padded prompt tokens attention runs over
+
+``--json`` appends to ``BENCH_serve.json`` — like ``BENCH_conv.json``, the
+artifact keeps prior runs under ``history`` (env-fingerprinted + git-rev
+stamped) so the serving perf trajectory across PRs is recorded, not
+overwritten.  ``--quick`` shrinks the trace (CI smoke).
 """
 from __future__ import annotations
+
+import argparse
+import json
+import subprocess
+import time
+from pathlib import Path
 
 import jax
 import numpy as np
@@ -24,6 +59,7 @@ from benchmarks.timing import row
 from repro.configs import smoke_config
 from repro.obs import trace as _ot
 from repro.core.pruning import SparsityConfig
+from repro.dispatch import env_fingerprint
 from repro.models import registry as reg
 from repro.serve import (
     Engine,
@@ -43,6 +79,9 @@ PROMPT_LENS = (4, 24)
 # cost continuous batching removes
 NEW_TOKENS = (2, 24)
 PREFILL_CHUNK = 8
+# fixed page size so the bench measures the memory tier, not the
+# choose_page_size race (dispatch owns that decision in real serving)
+PAGE_SIZE = 8
 
 
 def _build_engine():
@@ -76,46 +115,256 @@ def _run_static(engine, trace):
     return useful, decode_s
 
 
-def _run_sched(engine, trace):
-    sched = Scheduler(engine, n_slots=N_SLOTS, prefill_chunk=PREFILL_CHUNK)
+def _run_sched(engine, trace, *, paged=False, budget_rows=None):
+    kwargs = {}
+    if paged:
+        kwargs = dict(paged=True, page_size=PAGE_SIZE,
+                      kv_budget_rows=budget_rows)
+    sched = Scheduler(engine, n_slots=N_SLOTS, prefill_chunk=PREFILL_CHUNK,
+                      **kwargs)
     completions = sched.run(trace)
     useful = sum(c.n_generated for c in completions)
     p50, p99 = latency_percentiles(completions)
-    return useful, sched.stats["decode_s"], p50, p99
+    tokens = {c.uid: c.tokens for c in completions}
+    return useful, sched.stats["decode_s"], p50, p99, sched.page_stats, tokens
 
 
-def run(iters: int = 3):
+# ---------------------------------------------------------------------------
+# Memory accounting (analytic where the layout is static, measured where not)
+# ---------------------------------------------------------------------------
+
+
+def _kv_row_bytes(cfg) -> int:
+    """Bytes one KV cache row (one token position) costs across all layers:
+    k + v, [KV heads, head_dim] each."""
+    itemsize = np.dtype(cfg.dtype).itemsize
+    return 2 * cfg.n_layers * cfg.n_kv_heads * cfg.resolved_head_dim * itemsize
+
+
+def _contig_max_len(trace) -> int:
+    """The contiguous pool's per-slot row reservation — same sizing rule as
+    Scheduler.run_iter (the padded final prefill chunk must fit)."""
+    needed = max(len(r.prompt) + r.max_new_tokens for r in trace)
+    c = PREFILL_CHUNK
+    pad_end = max(-(-len(r.prompt) // c) * c for r in trace)
+    return max(needed, pad_end)
+
+
+def _admission_capacity(trace, budget_rows, max_len, page_size):
+    """Max concurrent requests each memory discipline can hold inside the
+    same physical row budget.  Contiguous admission is slot-granular — every
+    request reserves ``max_len`` rows no matter its size.  Paged admission
+    reserves ``ceil((prompt + budget) / page_size)`` pages (the scheduler's
+    full-budget upfront reservation), so capacity depends on the actual
+    trace; we FIFO-fill it the way the scheduler's admission loop would."""
+    cap_contig = budget_rows // max_len
+    free_pages = budget_rows // page_size
+    cap_paged = 0
+    for r in trace:
+        need = -(-(len(r.prompt) + r.max_new_tokens) // page_size)
+        if need > free_pages:
+            break
+        free_pages -= need
+        cap_paged += 1
+    return cap_contig, cap_paged
+
+
+def _prefill_pad_tokens(trace) -> int:
+    """Padded prompt tokens the contiguous chunked-prefill path runs
+    attention over (each prompt processed as ceil(S/C) chunks of C).  The
+    packed path's count is identically zero — prompts are concatenated into
+    one exact-shape stream."""
+    c = PREFILL_CHUNK
+    return sum(-(-len(r.prompt) // c) * c - len(r.prompt) for r in trace)
+
+
+# ---------------------------------------------------------------------------
+# Harness
+# ---------------------------------------------------------------------------
+
+
+def measure(iters: int = 3, quick: bool = False):
+    """Returns the full result dict (the --json payload body)."""
+    n_req = 6 if quick else N_REQUESTS
     engine = _build_engine()
-    trace = synthetic_trace(N_REQUESTS, seed=0, vocab=engine.cfg.vocab_size,
+    trace = synthetic_trace(n_req, seed=0, vocab=engine.cfg.vocab_size,
                             prompt_lens=PROMPT_LENS, new_tokens=NEW_TOKENS)
-    # warm both paths (compiles every static batch shape + the scheduler's
-    # chunk/pool executables), then take the best measured run
+    max_len = _contig_max_len(trace)
+    budget_rows = N_SLOTS * max_len  # the contiguous pool's own footprint
+    row_bytes = _kv_row_bytes(engine.cfg)
+
+    # warm all three paths (compiles every static batch shape, the
+    # scheduler's chunk/pool executables, and the paged/packed steps), then
+    # take the best measured run
     _run_static(engine, trace)
     _run_sched(engine, trace)
-    best_static = best_sched = None
+    _run_sched(engine, trace, paged=True, budget_rows=budget_rows)
+    best_static = best_sched = best_paged = None
     for i in range(max(1, iters - 1)):
         with _ot.span("bench.serve_static", rep=i):
             u_s, t_s = _run_static(engine, trace)
         if best_static is None or t_s < best_static[1]:
             best_static = (u_s, t_s)
         with _ot.span("bench.serve_sched", rep=i):
-            u_c, t_c, p50, p99 = _run_sched(engine, trace)
-        if best_sched is None or t_c < best_sched[1]:
-            best_sched = (u_c, t_c, p50, p99)
+            res_c = _run_sched(engine, trace)
+        if best_sched is None or res_c[1] < best_sched[1]:
+            best_sched = res_c
+        with _ot.span("bench.serve_paged", rep=i):
+            res_p = _run_sched(engine, trace, paged=True,
+                               budget_rows=budget_rows)
+        if best_paged is None or res_p[1] < best_paged[1]:
+            best_paged = res_p
+
+    # greedy decoding: the paged scheduler must emit the same tokens as the
+    # contiguous slot path — a silent numeric divergence here would make the
+    # perf comparison meaningless
+    for uid, toks in best_sched[5].items():
+        if not np.array_equal(toks, best_paged[5][uid]):
+            raise AssertionError(
+                f"paged scheduler diverged from contiguous on request {uid}")
 
     u_s, t_s = best_static
-    u_c, t_c, p50, p99 = best_sched
+    u_c, t_c, p50_c, p99_c = best_sched[:4]
+    u_p, t_p, p50_p, p99_p, pstats = best_paged[:5]
+    hwm_contig = budget_rows * row_bytes  # preallocated => hwm == pool
+    hwm_paged = int(pstats["kv_rows_hwm"]) * row_bytes  # measured peak
+    cap_contig, cap_paged = _admission_capacity(
+        trace, budget_rows, max_len, PAGE_SIZE)
+    pad_contig = _prefill_pad_tokens(trace)
+    return {
+        "n_requests": n_req,
+        "n_slots": N_SLOTS,
+        "prefill_chunk": PREFILL_CHUNK,
+        "page_size": PAGE_SIZE,
+        "max_len": max_len,
+        "budget_rows": budget_rows,
+        "kv_row_bytes": row_bytes,
+        "static": {"useful": u_s, "decode_s": t_s},
+        "sched": {"useful": u_c, "decode_s": t_c, "p50_s": p50_c,
+                  "p99_s": p99_c},
+        "paged": {"useful": u_p, "decode_s": t_p, "p50_s": p50_p,
+                  "p99_s": p99_p, "page_stats": pstats},
+        "kv_hwm_bytes": {"contig": hwm_contig, "paged": hwm_paged},
+        "admission_capacity": {"contig": cap_contig, "paged": cap_paged},
+        "prefill_pad_tokens": {"contig": pad_contig, "packed": 0},
+    }
+
+
+def rows_from(r) -> list:
+    u_s, t_s = r["static"]["useful"], r["static"]["decode_s"]
+    u_c, t_c = r["sched"]["useful"], r["sched"]["decode_s"]
+    u_p, t_p = r["paged"]["useful"], r["paged"]["decode_s"]
     static_tok_s = u_s / max(t_s, 1e-9)
     sched_tok_s = u_c / max(t_c, 1e-9)
+    paged_tok_s = u_p / max(t_p, 1e-9)
+    hwm = r["kv_hwm_bytes"]
+    cap = r["admission_capacity"]
+    pad = r["prefill_pad_tokens"]
+    frag = r["paged"]["page_stats"]["page_fragmentation"]
     return [
         row("serve_static_decode", t_s * 1e6 / u_s, f"{static_tok_s:.1f}"),
         row("serve_sched_decode", t_c * 1e6 / u_c, f"{sched_tok_s:.1f}"),
         row("serve_sched_speedup", 0.0, f"{sched_tok_s / static_tok_s:.2f}"),
-        row("serve_sched_p50", p50 * 1e6, f"{p50:.3f}"),
-        row("serve_sched_p99", p99 * 1e6, f"{p99:.3f}"),
+        row("serve_sched_p50", r["sched"]["p50_s"] * 1e6,
+            f"{r['sched']['p50_s']:.3f}"),
+        row("serve_sched_p99", r["sched"]["p99_s"] * 1e6,
+            f"{r['sched']['p99_s']:.3f}"),
+        row("serve_paged_decode", t_p * 1e6 / u_p, f"{paged_tok_s:.1f}"),
+        row("serve_paged_p50", r["paged"]["p50_s"] * 1e6,
+            f"{r['paged']['p50_s']:.3f}"),
+        row("serve_paged_p99", r["paged"]["p99_s"] * 1e6,
+            f"{r['paged']['p99_s']:.3f}"),
+        row("serve_kv_hwm", 0.0,
+            f"contig={hwm['contig'] / 1e6:.3f}MB "
+            f"paged={hwm['paged'] / 1e6:.3f}MB "
+            f"ratio={hwm['paged'] / max(hwm['contig'], 1):.2f} "
+            f"frag={frag:.2f}"),
+        row("serve_admission_capacity", 0.0,
+            f"contig={cap['contig']} paged={cap['paged']} "
+            f"budget_rows={r['budget_rows']}"),
+        row("serve_prefill_pad_tokens", 0.0,
+            f"contig={pad['contig']} packed={pad['packed']}"),
     ]
 
 
-if __name__ == "__main__":
-    for line in run():
+def run(iters: int = 3):
+    return rows_from(measure(iters=iters))
+
+
+HISTORY_CAP = 20  # trajectory points kept; beyond this, oldest runs drop
+
+
+def _git_rev() -> str:
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            cwd=Path(__file__).resolve().parent, capture_output=True,
+            text=True, timeout=5, check=True).stdout.strip() or "unknown"
+    except Exception:  # noqa: BLE001 — not a git checkout / git missing
+        return "unknown"
+
+
+def _write_json(results, iters, quick=False):
+    """Append this run to BENCH_serve.json (same trajectory discipline as
+    ``bench_conv_fused._write_json`` keeps for BENCH_conv.json): a FULL run
+    becomes the top-level payload and the previous one is pushed onto
+    ``history`` (capped at :data:`HISTORY_CAP`); every run carries the
+    dispatch-layer environment fingerprint + git revision so points from
+    different machines/commits are distinguishable.  A ``--quick`` run only
+    refreshes the ``smoke`` section of an existing payload."""
+    path = Path(__file__).resolve().parent.parent / "BENCH_serve.json"
+    old = None
+    if path.exists():
+        try:
+            old = json.loads(path.read_text())
+        except json.JSONDecodeError:
+            old = None
+        if not isinstance(old, dict):
+            old = None
+    run_payload = {
+        "backend": jax.default_backend(),
+        "arch": ARCH,
+        "sparsity": SPARSITY,
+        "iters": iters,
+        "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
+        "git_rev": _git_rev(),
+        "fingerprint": env_fingerprint(),
+        "serve": results,
+    }
+    if quick and old is not None and "serve" in old:
+        old["smoke"] = run_payload
+        payload = old
+        note = "refreshed smoke section"
+    else:
+        history = []
+        if old is not None:
+            history = old.pop("history", [])
+            old.pop("smoke", None)
+            history.append(old)
+        history = history[-HISTORY_CAP:]
+        payload = dict(run_payload, history=history)
+        note = f"{len(history)} prior run(s) kept in history"
+    path.write_text(json.dumps(payload, indent=1))
+    print(f"wrote {path} ({note})")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--json", action="store_true",
+                    help="append to BENCH_serve.json (perf trajectory "
+                         "artifact)")
+    ap.add_argument("--quick", action="store_true",
+                    help="shorter trace, 3 iters (CI smoke)")
+    ap.add_argument("--iters", type=int, default=None)
+    args = ap.parse_args(argv)
+
+    iters = args.iters if args.iters is not None else (3 if args.quick else 4)
+    results = measure(iters=iters, quick=args.quick)
+    for line in rows_from(results):
         print(line)
+    if args.json:
+        _write_json(results, iters, quick=args.quick)
+
+
+if __name__ == "__main__":
+    main()

@@ -12,9 +12,17 @@ echo "== serve scheduler smoke =="
 python -m repro.launch.serve --arch smollm-360m --smoke --continuous \
     --requests 6 --slots 3 --prompt-len 12 --new-tokens 8 --prefill-chunk 8
 
+echo "== paged-KV scheduler smoke (packed prefill + paged decode, trace validated) =="
+PAGED_TRACE="$(mktemp -t repro_paged_XXXXXX.json)"
+trap 'rm -f "$PAGED_TRACE"' EXIT
+python -m repro.launch.serve --arch smollm-360m --smoke --continuous \
+    --paged --page-size 8 --requests 6 --slots 3 --prompt-len 12 \
+    --new-tokens 8 --prefill-chunk 8 --trace "$PAGED_TRACE"
+python -m repro.obs.validate "$PAGED_TRACE"
+
 echo "== obs trace smoke (serve --trace -> Perfetto-loadable JSON) =="
 OBS_TRACE="$(mktemp -t repro_obs_XXXXXX.json)"
-trap 'rm -f "$OBS_TRACE"' EXIT
+trap 'rm -f "$OBS_TRACE" "$PAGED_TRACE"' EXIT
 python -m repro.launch.serve --arch smollm-360m --smoke --continuous \
     --requests 6 --slots 3 --prompt-len 12 --new-tokens 8 --prefill-chunk 8 \
     --trace "$OBS_TRACE"

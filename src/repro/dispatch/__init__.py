@@ -4,18 +4,22 @@
 # best_impl() selection layer every sparse call site consults.
 from repro.dispatch.registry import (  # noqa: F401
     BANDED_CONV_GEOMETRY,
+    DEFAULT_PAGE_SIZE,
     FUSED_CONV_GEOMETRY,
     LINEAR_GEOMETRY,
+    PAGED_ATTN_GEOMETRY,
     REGISTRY,
     VMEM_BYTES,
     ImplSpec,
     OperatorRegistry,
     OpKey,
     bucket_batch,
+    choose_page_size,
     conv_key,
     geometry_name,
     linear_key,
     linear_key_from,
+    paged_attn_key,
 )
 from repro.dispatch.profiler import (  # noqa: F401
     DEFAULT_DB_PATH,

@@ -49,7 +49,8 @@ _C_CANDS = _om.counter("dispatch.candidates_considered")
 _C_NO_PROFILE = _om.counter("dispatch.no_profile_resolves")
 
 # legacy per-op defaults used when dispatch is switched off
-_LEGACY_DEFAULT = {"linear": "compressed_xla", "conv": "im2col_sparse_pallas"}
+_LEGACY_DEFAULT = {"linear": "compressed_xla", "conv": "im2col_sparse_pallas",
+                   "paged_attn": "paged_attn_ref"}
 
 _DB: Optional[ProfileDB] = None
 _MEMO: Dict[tuple, ImplSpec] = {}

@@ -726,3 +726,171 @@ for _family, _apply_fn, _vm_for, _prio in (
             make_bench=functools.partial(_bench_conv, apply_fn=_apply),
             geometry=_geom,
         ))
+
+
+# ---------------------------------------------------------------------------
+# Paged attention (the serve.kv_pages memory tier): page_size x block_q
+# geometry ladder.  Page size is a *cache layout* decision, so it has two key
+# flavors: a planning key (no "ps" extra) races every geometry in profile_op
+# — that's how choose_page_size picks the layout before the cache is
+# allocated — and an execution key (pinned "ps") where only matching-layout
+# pallas candidates plus the gather reference remain feasible.
+# ---------------------------------------------------------------------------
+
+PAGED_ATTN_GEOMETRY = (
+    (("ps", 16), ("bq", 8)),
+    (("ps", 8), ("bq", 8)),
+    (("ps", 32), ("bq", 8)),
+    (("ps", 16), ("bq", 16)),
+)
+
+DEFAULT_PAGE_SIZE = dict(PAGED_ATTN_GEOMETRY[0])["ps"]
+
+
+def paged_attn_key(q_rows: int, n_heads: int, kv_heads: int, head_dim: int,
+                   kv_capacity: int, page_size: int = 0, dtype="float32",
+                   phase: str = "") -> OpKey:
+    """OpKey for one paged-attention instance.
+
+    ``page_size == 0`` builds the planning flavor; nonzero pins the physical
+    layout. ``kv_capacity`` (table width x page size) is bucketed like batch
+    so the DB is keyed by a bounded family of cache capacities.
+    """
+    extra = (("hd", head_dim), ("kvcap", bucket_batch(max(kv_capacity, 1))))
+    if page_size:
+        extra += (("ps", page_size),)
+    return OpKey(op="paged_attn", batch=bucket_batch(max(q_rows, 1)),
+                 d_in=head_dim, d_out=n_heads * head_dim, k_kept=kv_heads,
+                 tile=8, dtype=_dtype_tag(dtype), extra=extra, phase=phase)
+
+
+def _paged_vmem_for(geom_ps: int, geom_bq: int):
+    def vm(key: OpKey) -> int:
+        from repro.kernels.flash_attn.paged import paged_vmem_bytes
+
+        hd, kv = key.get("hd", key.d_in), max(key.k_kept, 1)
+        h = key.d_out // max(hd, 1)
+        return paged_vmem_bytes(geom_ps, kv, hd, geom_bq, h, sn=geom_bq,
+                                in_bytes=_key_itemsize(key))
+
+    return vm
+
+
+def _paged_feasible_for(geom_ps: int, geom_bq: int):
+    def feasible(key: OpKey) -> Tuple[bool, str]:
+        from repro.kernels.flash_attn.paged import paged_kernel_available
+
+        if not paged_kernel_available():
+            return False, "pallas build lacks async-copy or scalar prefetch"
+        hd, kv = key.get("hd"), key.k_kept
+        if hd <= 0 or kv <= 0:
+            return False, "paged geometry (hd, kv) missing from key extras"
+        h = key.d_out // hd
+        if h % kv != 0:
+            return False, f"H={h} not divisible by KV={kv} (head-map GQA)"
+        pinned = key.get("ps", 0)
+        if pinned and pinned != geom_ps:
+            return False, f"cache layout pinned to page size {pinned}"
+        vm = _paged_vmem_for(geom_ps, geom_bq)(key)
+        if vm > VMEM_BYTES:
+            return False, f"VMEM {vm} > budget {VMEM_BYTES}"
+        return True, "ok"
+
+    return feasible
+
+
+def _synth_paged(key: OpKey, ps: int):
+    """Deterministic decode-shaped operands for a paged-attention bench."""
+    import numpy as np
+
+    hd, kv = key.get("hd"), key.k_kept
+    h = key.d_out // hd
+    b = key.batch
+    kvcap = key.get("kvcap", 128)
+    n_max = -(-kvcap // ps)
+    p = b * n_max
+    q = _rand((b, 1, h, hd), 1, key.dtype)
+    kn = _rand((b, 1, kv, hd), 2, key.dtype)
+    vn = _rand((b, 1, kv, hd), 3, key.dtype)
+    kp = _rand((p + 1, ps, kv, hd), 4, key.dtype)
+    vp = _rand((p + 1, ps, kv, hd), 5, key.dtype)
+    tables = np.arange(p, dtype=np.int32).reshape(b, n_max)
+    # three-quarter-full caches: the ragged-final-page case is the hot one
+    lengths = np.full((b,), max(kvcap * 3 // 4, 1), np.int32)
+    return q, kn, vn, kp, vp, tables, lengths
+
+
+def _bench_paged_ref(key: OpKey):
+    import jax
+
+    from repro.kernels.flash_attn.paged import paged_attention_ref
+
+    ps = key.get("ps", 0) or DEFAULT_PAGE_SIZE
+    q, kn, vn, kp, vp, tables, lengths = _synth_paged(key, ps)
+    f = jax.jit(lambda q: paged_attention_ref(q, kn, vn, kp, vp, tables,
+                                              lengths))
+    return lambda: f(q)
+
+
+def _bench_paged_pallas(key: OpKey, geom_ps: int, geom_bq: int):
+    import jax
+
+    from repro.kernels.flash_attn.paged import paged_attention_pallas
+    from repro.kernels.pltpu_compat import should_interpret
+
+    # the candidate's OWN page size, not the key's: a planning key races
+    # every geometry's physical layout against the others
+    q, kn, vn, kp, vp, tables, lengths = _synth_paged(key, geom_ps)
+    interp = should_interpret()
+    f = jax.jit(lambda q: paged_attention_pallas(
+        q, kn, vn, kp, vp, tables, lengths, page_size=geom_ps,
+        block_q=geom_bq, interpret=interp))
+    return lambda: f(q)
+
+
+REGISTRY.register(ImplSpec(
+    name="paged_attn_ref", op="paged_attn", backend="xla",
+    requires=frozenset(), priority=10,
+    feasible=_always, vmem_bytes=_no_vmem,
+    make_bench=_bench_paged_ref,
+))
+
+for _geom in PAGED_ATTN_GEOMETRY:
+    _gps, _gbq = dict(_geom)["ps"], dict(_geom)["bq"]
+    REGISTRY.register(ImplSpec(
+        name=geometry_name("paged_attn_pallas", _geom,
+                           PAGED_ATTN_GEOMETRY[0]),
+        op="paged_attn", backend="pallas",
+        requires=frozenset(), priority=5,
+        feasible=_paged_feasible_for(_gps, _gbq),
+        vmem_bytes=_paged_vmem_for(_gps, _gbq),
+        make_bench=functools.partial(_bench_paged_pallas, geom_ps=_gps,
+                                     geom_bq=_gbq),
+        geometry=_geom,
+    ))
+
+
+def choose_page_size(n_heads: int, kv_heads: int, head_dim: int,
+                     kv_capacity: int, *, q_rows: int = 8, dtype="float32",
+                     phase: str = "decode", db=None,
+                     profile: bool = False) -> int:
+    """Pick the KV page size for a serving config (the cache-layout plan).
+
+    Resolves the unpinned planning key: with ``profile=True`` (or a warm
+    DB), profile_op has raced every ``PAGED_ATTN_GEOMETRY`` page size for
+    this shape and the winner's layout is returned; otherwise the heuristic
+    rung decides (DEFAULT_PAGE_SIZE when the gather reference wins).
+    """
+    from repro.dispatch.dispatch import best_impl, ensure_profiled
+    from repro.dispatch.profiler import TuningError
+
+    key = paged_attn_key(q_rows, n_heads, kv_heads, head_dim, kv_capacity,
+                         page_size=0, dtype=dtype, phase=phase)
+    if profile:
+        try:
+            ensure_profiled(key, db=db)
+        except TuningError:
+            pass
+    spec = best_impl(key, db=db)
+    ps = spec.geom("ps", 0) if spec is not None else 0
+    return ps or DEFAULT_PAGE_SIZE

@@ -34,6 +34,28 @@ HAS_ASYNC_COPY = (
     and MEM_ANY is not None
 )
 
+# Scalar-prefetched grids (page tables / length vectors delivered to SMEM
+# ahead of the kernel body) — required by the ragged paged-attention kernel,
+# whose DMA source indices come from a runtime page table.
+PREFETCH_GRID_SPEC = getattr(pltpu, "PrefetchScalarGridSpec", None)
+HAS_SCALAR_PREFETCH = PREFETCH_GRID_SPEC is not None
+
+
+def prefetch_grid_spec(*, num_scalar_prefetch, grid, in_specs, out_specs,
+                       scratch_shapes):
+    """Grid spec whose first ``num_scalar_prefetch`` operands are scalar
+    arrays prefetched to SMEM (kernel sees them first; index maps receive
+    them as trailing ref args)."""
+    if PREFETCH_GRID_SPEC is None:
+        raise NotImplementedError(
+            "this jax/pallas build has no pltpu.PrefetchScalarGridSpec; the "
+            "paged-attention kernel is unavailable (its dispatch predicate "
+            "should have gated on pltpu_compat.HAS_SCALAR_PREFETCH)")
+    return PREFETCH_GRID_SPEC(
+        num_scalar_prefetch=num_scalar_prefetch, grid=grid,
+        in_specs=in_specs, out_specs=out_specs,
+        scratch_shapes=scratch_shapes)
+
 
 def make_async_copy(src_ref, dst_ref, sem_ref):
     """Async copy descriptor (``.start()`` / ``.wait()``) between memory

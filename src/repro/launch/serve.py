@@ -13,6 +13,15 @@ spans, per-request TTFT/TPOT metrics) loadable in Perfetto:
 
     PYTHONPATH=src python -m repro.launch.serve --arch smollm-360m --smoke \
         --continuous --requests 12 --slots 4 --trace out.json
+
+``--paged`` switches the continuous scheduler onto the paged-KV memory tier
+(``repro.serve.kv_pages``): block-granular admission, packed padding-free
+prefill, and page-occupancy gauges in the summary (and in the ``--trace``
+metrics snapshot).  ``--page-size`` pins the page size; omitted, dispatch
+races the registered page-size geometries for the serving shape:
+
+    PYTHONPATH=src python -m repro.launch.serve --arch smollm-360m --smoke \
+        --continuous --paged --page-size 8 --requests 12 --slots 4
 """
 from __future__ import annotations
 
@@ -67,12 +76,14 @@ def run_continuous(args) -> None:
         args.requests, seed=0, vocab=cfg.vocab_size,
         prompt_lens=(max(args.prompt_len // 4, 1), args.prompt_len),
         new_tokens=(max(args.new_tokens // 4, 1), args.new_tokens))
-    sched = Scheduler(eng, n_slots=args.slots, prefill_chunk=args.prefill_chunk)
+    sched = Scheduler(eng, n_slots=args.slots, prefill_chunk=args.prefill_chunk,
+                      paged=args.paged, page_size=args.page_size)
     log = print if args.trace == "" else None
     completions = sched.run(trace, log_fn=log)
     stats = sched.stats
     p50, p99 = latency_percentiles(completions)
-    print(f"arch={cfg.name} sparse={args.sparsity} continuous "
+    mode = f"paged(page_size={sched.page_size})" if args.paged else "contiguous"
+    print(f"arch={cfg.name} sparse={args.sparsity} continuous kv={mode} "
           f"slots={args.slots} requests={len(completions)}")
     print(f"decode {stats['decode_tok_s']:.1f} tok/s "
           f"({stats['generated_tokens']} tokens, "
@@ -82,6 +93,13 @@ def run_continuous(args) -> None:
           f"p99 {stats['ttft_p99_s']*1e3:.1f} ms; "
           f"tpot p50 {stats['tpot_p50_s']*1e3:.2f} ms "
           f"p99 {stats['tpot_p99_s']*1e3:.2f} ms")
+    if args.paged:
+        ps = sched.page_stats
+        print(f"pages peak {int(ps['pages_peak'])} "
+              f"(hwm {int(ps['kv_rows_hwm'])} KV rows), "
+              f"occupancy {int(ps['pages_active'])} active / "
+              f"{int(ps['pages_free'])} free, "
+              f"fragmentation {ps['page_fragmentation']:.2f}")
     for c in completions[:2]:
         print(f"  uid={c.uid}: {c.tokens[:16].tolist()}")
 
@@ -108,12 +126,23 @@ def main():
     ap.add_argument("--slots", type=int, default=4,
                     help="KV slot count (decode batch width) for --continuous")
     ap.add_argument("--prefill-chunk", type=int, default=16)
+    ap.add_argument("--paged", action="store_true",
+                    help="page the KV cache (serve.kv_pages) and prefill "
+                         "admitted prompts as one packed padding-free "
+                         "stream; --continuous only")
+    ap.add_argument("--page-size", type=int, default=None,
+                    help="KV rows per page; default lets "
+                         "dispatch.choose_page_size race the registered "
+                         "page-size geometries for this serving shape")
     ap.add_argument("--trace", nargs="?", const="", default=None,
                     metavar="PATH",
                     help="bare: print per-request admit/retire events; "
                          "with PATH: enable the obs layer and write a "
                          "Perfetto-loadable Chrome trace to PATH")
     args = ap.parse_args()
+    if args.paged and not args.continuous:
+        raise SystemExit("--paged requires --continuous (the static engine "
+                         "uses the contiguous per-batch cache)")
     trace_path = args.trace if args.trace else None
     if trace_path:
         obs.set_enabled(True)

@@ -383,3 +383,127 @@ def cache_write(cache_k, cache_v, k_news, v_news, pos):
     v2 = jax.vmap(write1, in_axes=(1, 1, 0), out_axes=1)(
         cache_v, v_news.astype(cache_v.dtype), pos)
     return k2, v2
+
+
+# ---------------------------------------------------------------------------
+# Paged KV cache (repro.serve.kv_pages memory tier)
+# ---------------------------------------------------------------------------
+
+
+def paged_cache_init(cfg: ModelConfig, n_pages: int, page_size: int,
+                     n_layers: int, dtype):
+    """Physical paged cache: [L, n_pages + 1, page_size, KV, D].
+
+    The extra page at index ``n_pages`` is the trash page — the write
+    target for padded page-table entries (inactive slots, rows past a
+    sequence's mapping). It may hold arbitrary junk; reads are always
+    masked by the per-sequence length, so nothing ever attends to it.
+    """
+    kv, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    shape = (n_layers, n_pages + 1, page_size, kv, hd)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def page_rows(tables, seq_idx, pos, page_size: int):
+    """Physical flat row index for each (sequence, position) pair.
+
+    tables [n_slots, n_max] int32; seq_idx [N] slot per token; pos [N]
+    logical position. Returns [N] int32 indices into the
+    ``[P * page_size]``-row flattened view of the paged cache.
+    """
+    pos = jnp.asarray(pos, jnp.int32)
+    page_id = tables[seq_idx, pos // page_size]
+    return page_id * page_size + pos % page_size
+
+
+def paged_cache_write(cache_k, cache_v, k_news, v_news, rows):
+    """Scatter the step's new K/V through page-table rows.
+
+    cache_*: [L, P, page_size, KV, D]; *_news: [L, N, KV, D]; rows: [N]
+    flat physical row per token (from :func:`page_rows`). Inactive slots'
+    rows all alias the trash page — duplicate scatter targets there are
+    fine because those rows are never read.
+    """
+    l, p, ps, kv, hd = cache_k.shape
+    fk = cache_k.reshape(l, p * ps, kv, hd)
+    fv = cache_v.reshape(l, p * ps, kv, hd)
+    fk = fk.at[:, rows].set(k_news.astype(cache_k.dtype))
+    fv = fv.at[:, rows].set(v_news.astype(cache_v.dtype))
+    return fk.reshape(cache_k.shape), fv.reshape(cache_v.shape)
+
+
+def paged_attn_decode(
+    params,
+    cfg: ModelConfig,
+    x: jax.Array,
+    layer_cache: Tuple[jax.Array, jax.Array],
+    *,
+    pos: jax.Array,
+    tables: jax.Array,
+    page_size: int,
+):
+    """One-token decode against a paged READ-ONLY cache.
+
+    x [B, 1, d]; layer_cache (k_pages, v_pages): [P, page_size, KV, D];
+    pos [B] int32 per-slot lengths; tables [B, n_max] int32 page tables.
+    Same no-write-in-scan contract as :func:`attn_decode` — returns
+    (out, (k_new, v_new)) and the caller scatters through the page table
+    once after the layer scan.
+    """
+    b = x.shape[0]
+    pos_b = jnp.broadcast_to(jnp.reshape(jnp.asarray(pos, jnp.int32), (-1,)), (b,))
+    q, k_new, v_new = _qkv(params, cfg, x, pos_b[:, None], None)
+    kc, vc = layer_cache
+    from repro.kernels.flash_attn import paged_attention
+
+    o = paged_attention(q, k_new, v_new, kc, vc, tables, pos_b,
+                        page_size=page_size)
+    o = o.reshape(b, 1, -1)
+    return linear_apply(params["o"], o), (k_new, v_new)
+
+
+def packed_sdpa(q, k, v, *, seq_ids) -> jax.Array:
+    """Block-diagonal causal attention over one packed token stream.
+
+    q [1, T, H, D]; k/v [1, T, KV, D]; seq_ids [T] int32 — token t may
+    attend to token s iff they share a sequence and s <= t (prompts are
+    stream-contiguous with increasing positions, so stream order IS causal
+    order). This is the padding-free prefill: no masked-out pad columns,
+    zero wasted attention FLOPs.
+    """
+    b, t, h, d = q.shape
+    kvh = k.shape[2]
+    scale = 1.0 / math.sqrt(d)
+    same = seq_ids[:, None] == seq_ids[None, :]
+    causal = jnp.arange(t)[None, :] <= jnp.arange(t)[:, None]
+    mask = same & causal
+    if h % kvh == 0:
+        g = h // kvh
+        qg = q.reshape(b, t, kvh, g, d)
+        s = jnp.einsum("bqkgd,bskd->bkgqs", qg,
+                       k.astype(q.dtype)).astype(jnp.float32) * scale
+        s = jnp.where(mask.reshape(1, 1, 1, t, t), s, -1e30)
+        w = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+        o = jnp.einsum("bkgqs,bskd->bqkgd", w, v.astype(q.dtype))
+        return o.reshape(b, t, h, d)
+    kx = _expand_kv(k, h).astype(q.dtype)
+    vx = _expand_kv(v, h).astype(q.dtype)
+    s = jnp.einsum("bqhd,bshd->bhqs", q, kx).astype(jnp.float32) * scale
+    s = jnp.where(mask.reshape(1, 1, t, t), s, -1e30)
+    w = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqs,bshd->bqhd", w, vx)
+
+
+def attn_prefill_packed(params, cfg: ModelConfig, x: jax.Array, *,
+                        seq_ids: jax.Array, positions: jax.Array):
+    """Packed multi-prompt prefill through one layer (no cache read).
+
+    x [1, T, d] is the concatenated stream; seq_ids/positions [T].
+    Returns (out [1, T, d'], (k [1,T,KV,D], v)) — the caller scatters all
+    K/V through the page tables after the layer scan.
+    """
+    q, k_new, v_new = _qkv(params, cfg, x, positions[None, :], None)
+    o = packed_sdpa(q, k_new, v_new, seq_ids=seq_ids)
+    t = x.shape[1]
+    o = o.reshape(1, t, -1)
+    return linear_apply(params["o"], o), (k_new, v_new)

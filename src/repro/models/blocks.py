@@ -161,3 +161,55 @@ def shared_block_decode(params, cfg: ModelConfig, h, h0, layer_cache, *, pos):
     x = linear_apply(params["fuse"], x)
     out, new_cache = block_decode(params["block"], cfg, x, layer_cache, pos=pos)
     return h + out, new_cache
+
+
+def block_paged_decode(params, cfg: ModelConfig, h, layer_cache, *, pos,
+                       tables, page_size: int):
+    """One-token decode through a transformer block against a paged cache.
+
+    layer_cache (k_pages, v_pages): [P, page_size, KV, D]; pos [B]; tables
+    [B, n_max].  Returns (h, (k_new, v_new)) — the caller scatters through
+    the page table after the layer scan (same contract as block_decode).
+    """
+    x = norm_apply(params["ln1"], h, cfg.norm)
+    a, new_kv = attn.paged_attn_decode(
+        params["attn"], cfg, x, layer_cache, pos=pos, tables=tables,
+        page_size=page_size,
+    )
+    h = h + a
+    x = norm_apply(params["ln2"], h, cfg.norm)
+    if cfg.is_moe:
+        if cfg.moe_impl == "shard_map":
+            from repro.models.moe import moe_apply_shard_map
+
+            y, _ = moe_apply_shard_map(params["moe"], cfg, x)
+        else:
+            y, _ = moe_apply(params["moe"], cfg, x)
+    else:
+        y = mlp_apply(params["mlp"], cfg, x)
+    return h + y, new_kv
+
+
+def block_prefill_packed(params, cfg: ModelConfig, h, *, seq_ids, positions):
+    """Packed multi-prompt prefill through a transformer block.
+
+    h [1, T, d] is the concatenated padding-free stream; seq_ids/positions
+    [T].  Returns (h, (k [1,T,KV,D], v)); the caller scatters the stream's
+    K/V through the page tables after the layer scan.
+    """
+    x = norm_apply(params["ln1"], h, cfg.norm)
+    a, kv_new = attn.attn_prefill_packed(
+        params["attn"], cfg, x, seq_ids=seq_ids, positions=positions,
+    )
+    h = h + a
+    x = norm_apply(params["ln2"], h, cfg.norm)
+    if cfg.is_moe:
+        if cfg.moe_impl == "shard_map":
+            from repro.models.moe import moe_apply_shard_map
+
+            y, _ = moe_apply_shard_map(params["moe"], cfg, x)
+        else:
+            y, _ = moe_apply(params["moe"], cfg, x)
+    else:
+        y = mlp_apply(params["mlp"], cfg, x)
+    return h + y, kv_new

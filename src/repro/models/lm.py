@@ -28,7 +28,9 @@ from repro.models.blocks import (
     block_apply,
     block_decode,
     block_init,
+    block_paged_decode,
     block_prefill_chunk,
+    block_prefill_packed,
     shared_block_apply,
     shared_block_decode,
     shared_block_init,
@@ -452,4 +454,87 @@ def prefill_chunk(params, cfg: ModelConfig, cache, tokens: jax.Array,
         return None, {"k": k2, "v": v2}
     h = norm_apply(params["final_norm"], h, cfg.norm)
     logits = _unembed(params, cfg, h)
+    return logits, {"k": k2, "v": v2}
+
+
+def paged_decode_step(params, cfg: ModelConfig, cache, tokens: jax.Array,
+                      pos: jax.Array, tables: jax.Array, page_size: int):
+    """One decode step against a paged KV cache (serve.kv_pages tier).
+
+    tokens [B, 1]; pos [B] int32 per-slot lengths; tables [B, n_max] int32
+    page tables; ``cache`` leaves are [L, P, page_size, KV, D] (P includes
+    the trash page). Returns (logits [B, 1, V], new_cache). Same
+    no-write-in-scan contract as :func:`decode_step`: the layers' new K/V
+    come out as scan ys and ONE page-table scatter commits them.
+    Attention-pattern families only.
+    """
+    if cfg.block_pattern != "attn":
+        raise NotImplementedError(
+            f"paged_decode_step supports attention families only, not "
+            f"block_pattern={cfg.block_pattern!r}")
+    h = embed_lookup(params["embed"], tokens).astype(jnp.dtype(cfg.dtype))
+    b = tokens.shape[0]
+    pos_b = jnp.broadcast_to(
+        jnp.reshape(jnp.asarray(pos, jnp.int32), (-1,)), (b,))
+
+    def body(carry, xs):
+        hh, = carry
+        lp, kc, vc = xs
+        hh, (kn, vn) = block_paged_decode(lp, cfg, hh, (kc, vc), pos=pos_b,
+                                          tables=tables, page_size=page_size)
+        return (hh,), (kn, vn)
+
+    (h,), (k_news, v_news) = jax.lax.scan(
+        body, (h,), (params["layers"], cache["k"], cache["v"]))
+    # k_news [L, B, 1, KV, D] -> [L, B, KV, D]; one scatter through the
+    # tables (inactive slots' rows land on the trash page)
+    rows = attn_mod.page_rows(tables, jnp.arange(b, dtype=jnp.int32), pos_b,
+                              page_size)
+    k2, v2 = attn_mod.paged_cache_write(
+        cache["k"], cache["v"], k_news[:, :, 0], v_news[:, :, 0], rows)
+    h = norm_apply(params["final_norm"], h, cfg.norm)
+    logits = _unembed(params, cfg, h)
+    return logits, {"k": k2, "v": v2}
+
+
+def prefill_packed(params, cfg: ModelConfig, cache, tokens: jax.Array,
+                   slot_ids: jax.Array, positions: jax.Array,
+                   tables: jax.Array, last_idx: jax.Array, page_size: int):
+    """Packed (padding-free) multi-prompt prefill into a paged cache.
+
+    tokens/slot_ids/positions [T] — several prompts concatenated into one
+    exact-shape stream (see ``serve.kv_pages.pack_prompts``); tables
+    [n_slots, n_max]; last_idx [n_new] stream indices of each prompt's final
+    token. Attention is block-diagonal causal over the stream — zero padded
+    columns, zero wasted FLOPs — and only the ``n_new`` last-token rows pay
+    the unembed matmul. Returns (logits [n_new, 1, V], cache with every
+    prompt's K/V scattered through its page table).
+
+    Retraces per distinct total stream length T (the padding-free
+    tradeoff); the scheduler admits all same-iteration arrivals in ONE
+    stream, so retraces are bounded by distinct admission-batch shapes.
+    """
+    if cfg.block_pattern != "attn":
+        raise NotImplementedError(
+            f"prefill_packed supports attention families only, not "
+            f"block_pattern={cfg.block_pattern!r}")
+    h = embed_lookup(params["embed"], tokens[None, :]).astype(
+        jnp.dtype(cfg.dtype))
+
+    def body(carry, xs):
+        hh, = carry
+        lp, = xs
+        hh, (kn, vn) = block_prefill_packed(lp, cfg, hh, seq_ids=slot_ids,
+                                            positions=positions)
+        return (hh,), (kn, vn)
+
+    (h,), (k_news, v_news) = jax.lax.scan(body, (h,), (params["layers"],))
+    # k_news [L, 1, T, KV, D] -> [L, T, KV, D]; one scatter commits the
+    # whole stream's K/V through the page tables
+    rows = attn_mod.page_rows(tables, slot_ids, positions, page_size)
+    k2, v2 = attn_mod.paged_cache_write(
+        cache["k"], cache["v"], k_news[:, 0], v_news[:, 0], rows)
+    h = norm_apply(params["final_norm"], h, cfg.norm)
+    h_last = jnp.take(h[0], last_idx, axis=0)  # [n_new, d]
+    logits = _unembed(params, cfg, h_last[:, None, :])
     return logits, {"k": k2, "v": v2}

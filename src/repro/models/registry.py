@@ -104,6 +104,43 @@ def prefill_chunk_fn(cfg: ModelConfig):
     )
 
 
+def _require_paged_family(cfg: ModelConfig, what: str):
+    if cfg.is_encoder_decoder or cfg.block_pattern != "attn":
+        raise NotImplementedError(
+            f"{what} requires a decoder-only attention family; "
+            f"{cfg.name} has block_pattern={cfg.block_pattern!r}"
+            + (" (encoder-decoder)" if cfg.is_encoder_decoder else ""))
+
+
+def paged_decode_fn(cfg: ModelConfig, page_size: int):
+    """Decode step against a paged KV cache (serve.kv_pages tier): tokens
+    [B, 1], pos [B], tables [B, n_max]. Attention families only."""
+    _require_paged_family(cfg, "paged decode")
+    return lambda params, cache, tokens, pos, tables: lm_mod.paged_decode_step(
+        params, cfg, cache, tokens, pos, tables, page_size
+    )
+
+
+def prefill_packed_fn(cfg: ModelConfig, page_size: int):
+    """Packed padding-free prefill into a paged cache: one concatenated
+    [T]-token stream with per-token slot ids/positions."""
+    _require_paged_family(cfg, "packed prefill")
+    return lambda params, cache, tokens, slot_ids, positions, tables, last_idx: (
+        lm_mod.prefill_packed(params, cfg, cache, tokens, slot_ids, positions,
+                              tables, last_idx, page_size)
+    )
+
+
+def paged_cache_init_fn(cfg: ModelConfig, n_pages: int, page_size: int):
+    """Physical paged cache ([L, n_pages + 1, page_size, KV, D] per leaf;
+    the +1 is the trash page)."""
+    _require_paged_family(cfg, "paged cache")
+    from repro.models import attention as attn_mod
+
+    return lambda: attn_mod.paged_cache_init(
+        cfg, n_pages, page_size, cfg.n_layers, jnp.dtype(cfg.dtype))
+
+
 def cache_init_fn(cfg: ModelConfig, batch: int, max_len: int):
     if cfg.is_encoder_decoder:
         return lambda: encdec_mod.encdec_cache_init(cfg, batch, max_len, cfg.encoder_seq)

@@ -1,4 +1,11 @@
 from repro.serve.engine import Engine, ServeConfig  # noqa: F401
+from repro.serve.kv_pages import (  # noqa: F401
+    PackedPrefill,
+    PageError,
+    PagePool,
+    PageTable,
+    pack_prompts,
+)
 from repro.serve.kv_slots import Slot, SlotError, SlotPool  # noqa: F401
 from repro.serve.scheduler import (  # noqa: F401
     Completion,

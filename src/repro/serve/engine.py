@@ -88,6 +88,10 @@ class Engine:
                                donate_argnums=(1,))
         self._prefill = jax.jit(_phased(reg.prefill_fn(cfg), "prefill"))
         self._prefill_chunk = None  # built lazily (attention families only)
+        # paged-cache steps, built lazily per page size (serve.kv_pages tier)
+        self._paged_decode = None
+        self._prefill_packed = None
+        self._paged_page_size = None
 
     # ------------------------------------------------------------------
     # Step primitives (shared by generate() and the continuous Scheduler)
@@ -150,6 +154,41 @@ class Engine:
         int32.  Returns (logits [B,1,V], cache).  The cache argument is
         donated — callers must rebind to the returned cache."""
         return self._decode(self.params, cache, tokens, pos)
+
+    def _build_paged(self, page_size: int):
+        """(Re)build the paged step pair for one physical page size.  The
+        paged cache is owned exclusively by the scheduler (no slot views),
+        so BOTH steps donate it and scatter in place."""
+        if self._paged_page_size == page_size:
+            return
+        self._paged_decode = jax.jit(
+            _phased(reg.paged_decode_fn(self.cfg, page_size), "decode"),
+            donate_argnums=(1,))
+        self._prefill_packed = jax.jit(
+            _phased(reg.prefill_packed_fn(self.cfg, page_size), "prefill"),
+            donate_argnums=(1,))
+        self._paged_page_size = page_size
+
+    def paged_decode_step(self, cache, tokens, pos, tables, *, page_size):
+        """One decode step against a paged cache. tokens [B,1]; pos [B];
+        tables [B, n_max] int32.  The cache argument is donated — callers
+        must rebind to the returned cache."""
+        self._build_paged(page_size)
+        return self._paged_decode(self.params, cache, jnp.asarray(tokens),
+                                  jnp.asarray(pos, jnp.int32),
+                                  jnp.asarray(tables, jnp.int32))
+
+    def packed_prefill_step(self, cache, packed, tables, *, page_size):
+        """Prefill a packed multi-prompt stream (kv_pages.PackedPrefill)
+        into a paged cache in ONE exact-shape call — zero padded tokens.
+        Returns (logits [n_new, 1, V] — one row per admitted prompt — and
+        the cache with all K/V scattered through the page tables).  Donates
+        the cache; retraces per distinct stream length."""
+        self._build_paged(page_size)
+        return self._prefill_packed(
+            self.params, cache, jnp.asarray(packed.tokens),
+            jnp.asarray(packed.slot_ids), jnp.asarray(packed.positions),
+            jnp.asarray(tables, jnp.int32), jnp.asarray(packed.last_idx))
 
     # ------------------------------------------------------------------
     # Static-batch generation

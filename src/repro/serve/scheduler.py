@@ -38,6 +38,7 @@ from repro.models import registry as reg
 from repro.obs import metrics as _om
 from repro.obs import trace as _ot
 from repro.serve.engine import Engine
+from repro.serve.kv_pages import PagePool, pack_prompts
 from repro.serve.kv_slots import SlotPool
 
 # Global-registry mirrors (no-ops while obs is off): the process-wide view a
@@ -106,6 +107,11 @@ class RequestQueue:
     def pop(self) -> Request:
         return self._q.popleft()
 
+    def peek(self) -> Request:
+        """Head of the queue without removing it (paged admission checks the
+        head's page cost before committing)."""
+        return self._q[0]
+
     def __len__(self) -> int:
         return len(self._q)
 
@@ -130,11 +136,23 @@ class Scheduler:
     max_len        : per-slot KV rows; defaults to the trace's
                      max(prompt_len + max_new_tokens)
     prefill_chunk  : chunked-prefill width C (admission latency knob: smaller
-                     chunks interleave admissions and decode more finely)
+                     chunks interleave admissions and decode more finely;
+                     contiguous mode only)
+    paged          : page the KV seq dimension (serve.kv_pages): admission is
+                     accounted in free *pages* — a short request costs
+                     ceil((prompt+budget)/page_size) pages, not max_len rows
+                     — and prompts prefill as ONE packed padding-free stream
+    page_size      : KV rows per page; None lets dispatch.choose_page_size
+                     race the PAGED_ATTN_GEOMETRY layouts for this shape
+    kv_budget_rows : total physical KV rows for the paged pool (the memory
+                     budget admission is charged against); defaults to
+                     n_slots * max_len, i.e. the contiguous pool's footprint
     """
 
     def __init__(self, engine: Engine, *, n_slots: int = 4,
-                 max_len: Optional[int] = None, prefill_chunk: int = 16):
+                 max_len: Optional[int] = None, prefill_chunk: int = 16,
+                 paged: bool = False, page_size: Optional[int] = None,
+                 kv_budget_rows: Optional[int] = None):
         cfg = engine.cfg
         if cfg.is_encoder_decoder or cfg.block_pattern != "attn":
             raise ValueError(
@@ -143,10 +161,15 @@ class Scheduler:
                 f"block_pattern={cfg.block_pattern!r}. Use Engine.generate.")
         if prefill_chunk < 1:
             raise ValueError(f"prefill_chunk must be >= 1, got {prefill_chunk}")
+        if page_size is not None and page_size < 1:
+            raise ValueError(f"page_size must be >= 1, got {page_size}")
         self.engine = engine
         self.n_slots = n_slots
         self.max_len = max_len
         self.prefill_chunk = prefill_chunk
+        self.paged = bool(paged)
+        self.page_size = page_size
+        self.kv_budget_rows = kv_budget_rows
         # Always-on private metrics registry backing the ``stats`` view —
         # live counters, so a partially-consumed run_iter generator reports
         # consistent numbers at any point (and zeros before the first run,
@@ -155,7 +178,9 @@ class Scheduler:
         for name in ("decode_steps", "decode_s", "generated_tokens",
                      "completed_requests"):
             self.metrics.counter(name)
-        for name in ("requests", "total_s", "queue_depth", "slots_active"):
+        for name in ("requests", "total_s", "queue_depth", "slots_active",
+                     "pages_active", "pages_free", "page_fragmentation",
+                     "pages_peak"):
             self.metrics.gauge(name)
         for name in ("ttft_s", "tpot_s", "latency_s"):
             self.metrics.histogram(name)
@@ -213,6 +238,21 @@ class Scheduler:
             out[f"{h[:-2]}_p99_s"] = hist.percentile(99)
         return out
 
+    @property
+    def page_stats(self) -> Dict[str, float]:
+        """Paged-pool occupancy view (all zeros in contiguous mode)."""
+        m = self.metrics
+        ps = self.page_size or 0
+        peak = m.gauge("pages_peak").value
+        return {
+            "page_size": float(ps),
+            "pages_active": m.gauge("pages_active").value,
+            "pages_free": m.gauge("pages_free").value,
+            "page_fragmentation": m.gauge("page_fragmentation").value,
+            "pages_peak": peak,
+            "kv_rows_hwm": peak * ps,
+        }
+
     def run(self, requests: Iterable[Request],
             log_fn: Optional[Callable[[str], None]] = None) -> List[Completion]:
         """Serve every request; returns completions in finish order (see
@@ -259,7 +299,31 @@ class Scheduler:
         n = self.n_slots
         queue = RequestQueue(reqs)
         pool = SlotPool(n, max_len)
-        cache = reg.cache_init_fn(cfg, n, max_len)()
+        pages: Optional[PagePool] = None
+        tables_np = None
+        ps = max_pages = 0
+        if self.paged:
+            if self.page_size is None:
+                # cache-layout plan: race the PAGED_ATTN_GEOMETRY page sizes
+                # for this serving shape (heuristic rung when unprofiled)
+                from repro import dispatch as _dispatch
+
+                self.page_size = _dispatch.choose_page_size(
+                    cfg.padded_heads, cfg.n_kv_heads, cfg.resolved_head_dim,
+                    max_len, q_rows=n, dtype=cfg.dtype,
+                    profile=bool(engine.scfg.profile_dispatch))
+            ps = self.page_size
+            budget_rows = self.kv_budget_rows or n * max_len
+            n_pages = budget_rows // ps
+            max_pages = -(-max_len // ps)
+            if n_pages < max_pages:
+                raise ValueError(
+                    f"kv_budget_rows={budget_rows} ({n_pages} pages of {ps}) "
+                    f"cannot hold one max-length request ({max_pages} pages)")
+            pages = PagePool(n_pages, ps)
+            cache = reg.paged_cache_init_fn(cfg, n_pages, ps)()
+        else:
+            cache = reg.cache_init_fn(cfg, n, max_len)()
         tok_buf = np.zeros((n,), np.int32)
         inflight: Dict[int, _InFlight] = {}
         key = jax.random.PRNGKey(engine.scfg.seed)
@@ -276,6 +340,8 @@ class Scheduler:
         def retire(idx: int) -> Completion:
             st = inflight.pop(idx)
             pool.free(idx)
+            if pages is not None:
+                pages.free(idx)
             comp = Completion(
                 uid=st.req.uid, prompt_len=len(st.req.prompt),
                 tokens=np.asarray(st.tokens, np.int32), t_submit=t0,
@@ -306,19 +372,10 @@ class Scheduler:
             # break B/E nesting.
             done_now: List[Completion] = []
             with _ot.span("serve.iter", it=it) as isp:
-                # -- admission: chunked prefill into every free slot ------
-                while queue and pool.n_free:
-                    req = queue.pop()
-                    with _ot.span("serve.admit", uid=req.uid,
-                                  prompt=len(req.prompt),
-                                  budget=req.max_new_tokens) as asp:
-                        slot = pool.alloc(req.uid)
-                        logits, cache = self._prefill_into(
-                            cache, slot.index, req.prompt, c_w)
-                        slot.pos = len(req.prompt)
-                        key, k = jax.random.split(key)
-                        tok = int(np.asarray(engine.sample(logits, k))[0])
-                        asp.set(slot=slot.index)
+                def admit_token(req, slot, tok):
+                    """Post-prefill bookkeeping shared by both admission
+                    paths: the prompt's first sampled token either retires
+                    the request on the spot or seeds its decode feed."""
                     c_gen.inc()
                     _G_TOKENS.inc()
                     inflight[slot.index] = _InFlight(
@@ -329,19 +386,82 @@ class Scheduler:
                         done_now.append(retire(slot.index))
                     else:
                         tok_buf[slot.index] = tok
+
+                if pages is not None:
+                    # -- paged admission: free-PAGE accounting, then ONE
+                    # packed padding-free prefill over every admitted
+                    # prompt (exact-shape stream, zero pad-token FLOPs) ----
+                    admitted = []
+                    while queue and pool.n_free:
+                        head = queue.peek()
+                        need = len(head.prompt) + head.max_new_tokens
+                        if not pages.can_admit(need):
+                            break  # FIFO: the head blocks on memory
+                        req = queue.pop()
+                        slot = pool.alloc(req.uid)
+                        pages.alloc(slot.index, need, request_id=req.uid)
+                        admitted.append((req, slot))
+                    if admitted:
+                        packed = pack_prompts(
+                            [r.prompt for r, _ in admitted],
+                            [s.index for _, s in admitted])
+                        tables_np = pages.table_array(n, max_pages)
+                        with _ot.span("serve.admit", n=len(admitted),
+                                      tokens=packed.total_tokens,
+                                      packed=True):
+                            logits, cache = engine.packed_prefill_step(
+                                cache, packed, tables_np, page_size=ps)
+                            for i, (req, slot) in enumerate(admitted):
+                                slot.pos = len(req.prompt)
+                                pages.advance(slot.index, len(req.prompt))
+                                key, k = jax.random.split(key)
+                                tok = int(np.asarray(
+                                    engine.sample(logits[i:i + 1], k))[0])
+                                admit_token(req, slot, tok)
+                else:
+                    # -- contiguous admission: chunked prefill per slot ---
+                    while queue and pool.n_free:
+                        req = queue.pop()
+                        with _ot.span("serve.admit", uid=req.uid,
+                                      prompt=len(req.prompt),
+                                      budget=req.max_new_tokens) as asp:
+                            slot = pool.alloc(req.uid)
+                            logits, cache = self._prefill_into(
+                                cache, slot.index, req.prompt, c_w)
+                            slot.pos = len(req.prompt)
+                            key, k = jax.random.split(key)
+                            tok = int(np.asarray(engine.sample(logits, k))[0])
+                            asp.set(slot=slot.index)
+                        admit_token(req, slot, tok)
                 m.gauge("queue_depth").set(len(queue))
                 m.gauge("slots_active").set(pool.n_active)
                 _G_QUEUE.set(len(queue))
                 _G_ACTIVE.set(pool.n_active)
+                if pages is not None:
+                    m.gauge("pages_active").set(pages.n_mapped)
+                    m.gauge("pages_free").set(pages.n_free)
+                    m.gauge("page_fragmentation").set(pages.fragmentation())
+                    m.gauge("pages_peak").set(pages.peak_pages)
 
                 if pool.n_active:
                     # -- one pool-shaped decode step ----------------------
                     pos_vec = pool.positions()
                     t1 = time.perf_counter()
-                    with _ot.span("serve.decode", active=pool.n_active) as dsp:
-                        logits, cache = engine.decode_step(
-                            cache, jnp.asarray(tok_buf[:, None]),
-                            jnp.asarray(pos_vec))
+                    with _ot.span("serve.decode", active=pool.n_active,
+                                  paged=bool(pages is not None)) as dsp:
+                        if pages is not None:
+                            # tables rebuilt every iteration: a retire frees
+                            # pages a NEW admission may re-map, and a stale
+                            # table would route an inactive slot's decode
+                            # write into the new owner's live page
+                            tables_np = pages.table_array(n, max_pages)
+                            logits, cache = engine.paged_decode_step(
+                                cache, tok_buf[:, None], pos_vec, tables_np,
+                                page_size=ps)
+                        else:
+                            logits, cache = engine.decode_step(
+                                cache, jnp.asarray(tok_buf[:, None]),
+                                jnp.asarray(pos_vec))
                         key, k = jax.random.split(key)
                         toks = np.asarray(engine.sample(logits, k))
                         dt = time.perf_counter() - t1
@@ -355,6 +475,8 @@ class Scheduler:
                     for idx in sorted(inflight):
                         st = inflight[idx]
                         pool.advance(idx)  # the step wrote st's fed token
+                        if pages is not None:
+                            pages.advance(idx)  # bounds-checked vs mapping
                         tok = int(toks[idx])
                         st.tokens.append(tok)
                         c_gen.inc()
@@ -371,6 +493,12 @@ class Scheduler:
             it += 1
 
         g_total.set(time.perf_counter() - t0)
+        if pages is not None:
+            pages.check_invariants()  # end-of-run: no leak survives retire
+            m.gauge("pages_active").set(pages.n_mapped)
+            m.gauge("pages_free").set(pages.n_free)
+            m.gauge("page_fragmentation").set(pages.fragmentation())
+            m.gauge("pages_peak").set(pages.peak_pages)
 
     # ------------------------------------------------------------------
 
