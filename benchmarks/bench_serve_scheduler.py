@@ -38,6 +38,10 @@ Rows:
   serve_kv_hwm          contiguous vs paged KV bytes high-water-mark
   serve_admission_capacity  max concurrent requests at the fixed KV budget
   serve_prefill_pad_tokens  padded prompt tokens attention runs over
+  serve_chaos_recovery  wall-clock overhead of recovering from a seeded
+                        fault schedule (grow-mode preempt-restore +
+                        scheduler-iteration fault), all requests still ok
+                        and token-identical to the clean run
 
 ``--json`` appends to ``BENCH_serve.json`` — like ``BENCH_conv.json``, the
 artifact keeps prior runs under ``history`` (env-fingerprinted + git-rev
@@ -56,12 +60,14 @@ import jax
 import numpy as np
 
 from benchmarks.timing import row
+from repro import fault
 from repro.configs import smoke_config
 from repro.obs import trace as _ot
 from repro.core.pruning import SparsityConfig
 from repro.dispatch import env_fingerprint
 from repro.models import registry as reg
 from repro.serve import (
+    STATUSES,
     Engine,
     Scheduler,
     ServeConfig,
@@ -115,18 +121,73 @@ def _run_static(engine, trace):
     return useful, decode_s
 
 
-def _run_sched(engine, trace, *, paged=False, budget_rows=None):
+def _run_sched(engine, trace, *, paged=False, budget_rows=None, alloc=None):
     kwargs = {}
     if paged:
         kwargs = dict(paged=True, page_size=PAGE_SIZE,
                       kv_budget_rows=budget_rows)
+        if alloc is not None:
+            kwargs["alloc"] = alloc
     sched = Scheduler(engine, n_slots=N_SLOTS, prefill_chunk=PREFILL_CHUNK,
                       **kwargs)
     completions = sched.run(trace)
     useful = sum(c.n_generated for c in completions)
     p50, p99 = latency_percentiles(completions)
     tokens = {c.uid: c.tokens for c in completions}
-    return useful, sched.stats["decode_s"], p50, p99, sched.page_stats, tokens
+    return (useful, sched.stats["decode_s"], p50, p99, sched.page_stats,
+            tokens, sched.stats)
+
+
+CHAOS_SPEC = "page_pool.alloc@grow:iter=2,scheduler.iter:iter=1"
+CHAOS_SEED = 0
+
+
+def _measure_chaos(engine, trace, budget_rows):
+    """Recovery-overhead leg: a clean grow-mode paged run vs the SAME run
+    under a seeded fault schedule (one injected grow-allocation failure —
+    forcing a preempt + restore — plus one lost scheduler iteration).  The
+    faulted run must still retire every request ``ok`` with tokens identical
+    to the clean run; the number reported is the wall-clock price of that
+    recovery, not a correctness tradeoff."""
+    # warm BOTH paths: grow-mode executables, plus the restored request's
+    # re-prefill shape (the fault schedule is deterministic, so the warmup
+    # compiles exactly the shapes the measured faulted run will hit —
+    # otherwise the overhead number is mostly jit compilation)
+    _run_sched(engine, trace, paged=True, budget_rows=budget_rows,
+               alloc="grow")
+    with fault.fault_scope(CHAOS_SPEC, seed=CHAOS_SEED):
+        _run_sched(engine, trace, paged=True, budget_rows=budget_rows,
+                   alloc="grow")
+    with _ot.span("bench.serve_chaos_clean"):
+        clean = _run_sched(engine, trace, paged=True,
+                           budget_rows=budget_rows, alloc="grow")
+    with _ot.span("bench.serve_chaos_faulted"):
+        with fault.fault_scope(CHAOS_SPEC, seed=CHAOS_SEED) as plan:
+            faulted = _run_sched(engine, trace, paged=True,
+                                 budget_rows=budget_rows, alloc="grow")
+    c_stats, f_stats = clean[6], faulted[6]
+    for uid, toks in clean[5].items():
+        if not np.array_equal(toks, faulted[5][uid]):
+            raise AssertionError(
+                f"faulted run diverged from clean run on request {uid} "
+                "(preempt-restore must be token-exact)")
+    statuses = {s: int(f_stats[f"retired_{s}"]) for s in STATUSES
+                if f_stats[f"retired_{s}"]}
+    if set(statuses) != {"ok"}:
+        raise AssertionError(
+            f"recoverable fault schedule lost requests: {statuses}")
+    return {
+        "spec": CHAOS_SPEC,
+        "seed": CHAOS_SEED,
+        "fired": dict(plan.fired),
+        "clean_total_s": c_stats["total_s"],
+        "faulted_total_s": f_stats["total_s"],
+        "recovery_overhead": f_stats["total_s"] / max(c_stats["total_s"],
+                                                      1e-9),
+        "preemptions": int(f_stats["preemptions"]),
+        "iter_faults": int(f_stats["iter_faults"]),
+        "statuses": statuses,
+    }
 
 
 # ---------------------------------------------------------------------------
@@ -223,6 +284,8 @@ def measure(iters: int = 3, quick: bool = False):
             raise AssertionError(
                 f"paged scheduler diverged from contiguous on request {uid}")
 
+    chaos = _measure_chaos(engine, trace, budget_rows)
+
     u_s, t_s = best_static
     u_c, t_c, p50_c, p99_c = best_sched[:4]
     u_p, t_p, p50_p, p99_p, pstats = best_paged[:5]
@@ -247,6 +310,7 @@ def measure(iters: int = 3, quick: bool = False):
         "kv_hwm_bytes": {"contig": hwm_contig, "paged": hwm_paged},
         "admission_capacity": {"contig": cap_contig, "paged": cap_paged},
         "prefill_pad_tokens": {"contig": pad_contig, "packed": 0},
+        "chaos": chaos,
     }
 
 
@@ -284,6 +348,13 @@ def rows_from(r) -> list:
             f"budget_rows={r['budget_rows']}"),
         row("serve_prefill_pad_tokens", 0.0,
             f"contig={pad['contig']} packed={pad['packed']}"),
+        row("serve_chaos_recovery",
+            (r["chaos"]["faulted_total_s"] - r["chaos"]["clean_total_s"])
+            * 1e6,
+            f"overhead={r['chaos']['recovery_overhead']:.2f}x "
+            f"preemptions={r['chaos']['preemptions']} "
+            f"iter_faults={r['chaos']['iter_faults']} "
+            f"ok={r['chaos']['statuses'].get('ok', 0)}"),
     ]
 
 

@@ -29,6 +29,12 @@ python -m repro.launch.serve --arch smollm-360m --smoke --continuous \
 # validator: non-empty, per-lane monotone timestamps, balanced B/E nesting
 python -m repro.obs.validate "$OBS_TRACE"
 
+echo "== chaos smoke (seeded faults: quarantine-degradation + request lifecycle) =="
+CHAOS_TRACE="$(mktemp -t repro_chaos_XXXXXX.json)"
+trap 'rm -f "$CHAOS_TRACE" "$OBS_TRACE" "$PAGED_TRACE"' EXIT
+python scripts/chaos_smoke.py --trace "$CHAOS_TRACE"
+python -m repro.obs.validate "$CHAOS_TRACE"
+
 echo "== sparse finetune smoke (conv VJP backward, interpret mode) =="
 python -c "from repro.models.vision import train_smoke; train_smoke(steps=2)"
 

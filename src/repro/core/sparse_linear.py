@@ -192,9 +192,16 @@ def linear_apply(params, x: jax.Array, *, prefer_pallas: bool = False,
 
         if impl is None and prefer_pallas:
             impl = "compressed_pallas"
-        spec = _dispatch.linear_impl(
-            x.shape, params["values"].shape, x.dtype, force=impl)
-        y = spec.apply(params, x)
+        key = _dispatch.linear_key_from(
+            x.shape, params["values"].shape, x.dtype,
+            phase=_dispatch.current_phase())
+        spec = _dispatch.best_impl(key, param_keys=("values", "idx"),
+                                   force=impl)
+        # execution guard: a candidate that fails to run (trace-time kernel
+        # crash or injected fault) is quarantined and the key re-resolves
+        # down the ladder instead of killing the forward
+        y = _dispatch.run_guarded(key, spec, lambda s: s.apply(params, x),
+                                  param_keys=("values", "idx"))
     elif "mask" in params:
         y = forward_masked(x, params["w"], params["mask"])
     else:

@@ -35,6 +35,7 @@ from repro.dispatch.profiler import (  # noqa: F401
 )
 from repro.dispatch.dispatch import (  # noqa: F401
     best_impl,
+    clear_quarantine,
     current_phase,
     dispatch_enabled,
     ensure_profiled,
@@ -45,5 +46,8 @@ from repro.dispatch.dispatch import (  # noqa: F401
     no_profile_scope,
     phase_scope,
     plan_params,
+    quarantine,
+    quarantined,
+    run_guarded,
     set_db,
 )

@@ -47,6 +47,8 @@ _C_DB_HIT = _om.counter("dispatch.db_hits")
 _C_DB_MISS = _om.counter("dispatch.db_misses")
 _C_CANDS = _om.counter("dispatch.candidates_considered")
 _C_NO_PROFILE = _om.counter("dispatch.no_profile_resolves")
+_C_QUARANTINE = _om.counter("dispatch.quarantine")
+_C_EXEC_RETRY = _om.counter("dispatch.execute_retries")
 
 # legacy per-op defaults used when dispatch is switched off
 _LEGACY_DEFAULT = {"linear": "compressed_xla", "conv": "im2col_sparse_pallas",
@@ -54,6 +56,92 @@ _LEGACY_DEFAULT = {"linear": "compressed_xla", "conv": "im2col_sparse_pallas",
 
 _DB: Optional[ProfileDB] = None
 _MEMO: Dict[tuple, ImplSpec] = {}
+
+# ---------------------------------------------------------------------------
+# Execution-time quarantine
+# ---------------------------------------------------------------------------
+#
+# The profiler picks the *fastest* candidate; nothing above this layer knows
+# whether that candidate can actually *run* here.  When execution fails (a
+# real kernel crash at trace time, or an injected fault from repro.fault),
+# run_guarded adds the (op, impl-name) pair to this process-local denylist —
+# geometry-pinned candidates carry their geometry in the name, so the pair IS
+# (impl, geometry) — and re-resolves down the normal ladder.  Quarantine is
+# deliberately ephemeral: it is never written to the ProfileDB, so a process
+# restart retries the full candidate space (the failure may have been
+# environmental).  _Q_GEN joins every memo key, so quarantining an impl
+# invalidates memoized resolutions the same way a registry change does.
+_QUARANTINE: set = set()
+_Q_GEN = 0
+
+
+def quarantine(op: str, impl: str, reason: str = "") -> bool:
+    """Denylist ``impl`` for ``op`` in this process.  Returns True when the
+    entry is new.  Emits a ``dispatch.quarantine`` instant + counter so
+    degraded serving is visible in traces."""
+    global _Q_GEN
+    if (op, impl) in _QUARANTINE:
+        return False
+    _QUARANTINE.add((op, impl))
+    _Q_GEN += 1
+    _C_QUARANTINE.inc()
+    _ot.instant("dispatch.quarantine", op=op, impl=impl,
+                reason=reason[:200] if reason else "",
+                denylist=len(_QUARANTINE))
+    return True
+
+
+def quarantined(op: Optional[str] = None) -> frozenset:
+    """The denylist: ``{(op, impl)}`` pairs, or just the impl names for one
+    ``op``."""
+    if op is None:
+        return frozenset(_QUARANTINE)
+    return frozenset(i for o, i in _QUARANTINE if o == op)
+
+
+def clear_quarantine() -> None:
+    """Empty the denylist (tests; operator intervention)."""
+    global _Q_GEN
+    if _QUARANTINE:
+        _QUARANTINE.clear()
+        _Q_GEN += 1
+
+
+def run_guarded(key: OpKey, spec: ImplSpec, call, *,
+                param_keys: Optional[Iterable[str]] = None,
+                db: Optional[ProfileDB] = None):
+    """Execute ``call(spec)`` with quarantine-degradation.
+
+    The ``dispatch.execute`` fault site probes first (so chaos schedules can
+    fail any candidate by name), then ``call`` runs.  On failure the
+    candidate is quarantined and the key re-resolves down the ladder —
+    explicit forces included: a forced impl that cannot execute degrades
+    rather than killing the serve loop.  Raises the last error only when
+    every remaining rung has been tried.
+
+    On CPU/interpret builds candidate execution happens during jit *tracing*,
+    so this try/except at the call boundary catches both injected faults and
+    real trace-time kernel failures before any donated buffer is consumed.
+    """
+    from repro import fault as _fault
+
+    pk = tuple(param_keys) if param_keys is not None else None
+    tried = set()
+    while True:
+        try:
+            _fault.maybe_fail("dispatch.execute", op=key.op, impl=spec.name)
+            return call(spec)
+        except Exception as e:  # noqa: BLE001 - degrade on any exec failure
+            tried.add(spec.name)
+            quarantine(key.op, spec.name,
+                       reason=f"{type(e).__name__}: {e}")
+            nxt = best_impl(key, param_keys=pk, db=db)
+            if nxt.name in tried:
+                raise
+            _C_EXEC_RETRY.inc()
+            _ot.instant("dispatch.execute_retry", op=key.op,
+                        failed=spec.name, retry=nxt.name)
+            spec = nxt
 
 
 def get_db() -> ProfileDB:
@@ -170,9 +258,11 @@ def best_impl(key: OpKey, *, param_keys: Optional[Iterable[str]] = None,
     # _profile_on_miss() is part of the key: a resolution memoized inside a
     # no_profile_scope (grad tracing) must not shadow a later forward-trace
     # lookup that is allowed to profile the same token
+    # _Q_GEN: quarantining an impl must invalidate memoized resolutions
+    # (quarantine survives memoization, not the other way around)
     memo_key = (key.token, pk, force, explicit, dispatch_enabled(),
                 _profile_on_miss(), the_db.uid, the_db.generation,
-                REGISTRY.generation)
+                REGISTRY.generation, _Q_GEN)
     hit = _MEMO.get(memo_key)
     if hit is not None:
         _C_MEMO_HIT.inc()
@@ -211,6 +301,13 @@ def _resolve(key: OpKey, pk, force: Optional[str], explicit: bool,
     _C_CANDS.inc(len(cands))
     by_name = {s.name: s for s in cands}
 
+    if force is not None and not explicit and (key.op, force) in _QUARANTINE:
+        # a process-wide env force naming a quarantined impl yields to the
+        # ladder (the quarantine exists because that impl failed to execute);
+        # an explicit call-site force= still wins below — the caller asked
+        # for this impl by name and run_guarded handles its failure
+        force = None
+
     if force is not None:
         if force in by_name:
             return by_name[force], "forced"
@@ -228,6 +325,17 @@ def _resolve(key: OpKey, pk, force: Optional[str], explicit: bool,
                 f"{sorted(REGISTRY.get(key.op, force).requires)}")
         # process-wide env override that doesn't apply to this layer's param
         # format: ignore it for this call rather than crash mid-model
+
+    if _QUARANTINE:
+        # drop denylisted candidates from every remaining rung (legacy, DB
+        # hit, profiled, heuristic) — unless quarantine has emptied the
+        # candidate set entirely, in which case resolution proceeds on the
+        # full set rather than refusing to run (run_guarded will surface the
+        # execution failure if it recurs)
+        alive = [s for s in cands if (key.op, s.name) not in _QUARANTINE]
+        if alive and len(alive) < len(cands):
+            cands = alive
+            by_name = {s.name: s for s in cands}
 
     if not dispatch_enabled():
         legacy = _LEGACY_DEFAULT.get(key.op)

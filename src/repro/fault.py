@@ -1,0 +1,275 @@
+"""Deterministic, seeded fault injection for the serving runtime.
+
+Robustness code is only trustworthy if its failure paths actually run.  This
+module gives the repo ONE way to make them run: named **fault sites** planted
+at the runtime's failure boundaries probe :func:`maybe_fail`, and a **fault
+plan** — parsed from the ``REPRO_FAULTS`` env var or installed
+programmatically via :func:`fault_scope` — decides which probes raise a typed
+:class:`InjectedFault`.  Everything is deterministic under a seed, so a chaos
+test that found a leak replays bit-for-bit.
+
+Design mirrors :mod:`repro.obs.trace`:
+
+  * **Zero-cost when off.**  Every probe first reads one module-global bool
+    (:func:`enabled`); with no plan installed (the default) ``maybe_fail``
+    returns immediately — the serving hot loop pays a single attribute read.
+  * **Env-var or programmatic.**  ``REPRO_FAULTS="site:iter=3,site:p=0.05"``
+    arms injection process-wide (picked up at import, like ``REPRO_OBS``);
+    tests use ``with fault_scope("page_pool.alloc:n=1"): ...`` which
+    installs a fresh plan and restores the previous state on exit.
+  * **Observable.**  Every injection emits a ``fault.inject`` obs instant and
+    bumps the ``fault.injected`` counter, so a trace of a chaos run shows
+    exactly where the failures landed.
+
+Schedule grammar (comma-separated entries)::
+
+    site[@match]:kind=value
+
+  ``site``   one of :data:`SITES` (unknown sites are allowed — a probe that
+             never runs simply never fires);
+  ``match``  optional filter: the entry only applies to probes whose context
+             (the ``**ctx`` kwargs of :func:`maybe_fail`) contains the value,
+             e.g. ``dispatch.execute@compressed_xla:n=1`` fails only the
+             ``compressed_xla`` candidate;
+  ``kind``   ``iter=K`` fire on the entry's K-th matching probe (0-based);
+             ``n=K``    fire on the first K matching probes;
+             ``p=F``    fire each matching probe with probability F, drawn
+                        from the plan's seeded RNG.
+
+Fault sites in the tree today (see ``docs/robustness.md``):
+
+    ``page_pool.alloc``   PagePool.alloc / PagePool.grow (simulated KV-page
+                          exhaustion -> scheduler preemption policy)
+    ``dispatch.execute``  dispatch.run_guarded around every resolved
+                          candidate's apply (-> quarantine-degradation)
+    ``kernel.paged_attn`` paged-attention execution boundary
+    ``scheduler.iter``    top of each scheduler iteration (transient hiccup)
+
+Note on jit: sites inside traced step functions (``dispatch.execute``,
+``kernel.paged_attn``) probe at *trace time* — an already-compiled executable
+re-probes only on retrace.  Sites in Python-level control flow
+(``scheduler.iter``, ``page_pool.alloc``) probe on every call.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import os
+import random
+from typing import Dict, List, Optional, Tuple
+
+from repro.obs import metrics as _om
+from repro.obs import trace as _ot
+
+__all__ = [
+    "SITES", "InjectedFault", "FaultRule", "FaultPlan", "parse_spec",
+    "enabled", "plan", "install", "uninstall", "configure", "fault_scope",
+    "maybe_fail",
+]
+
+# The named failure boundaries the runtime plants probes at.  Informational:
+# parse_spec accepts any site string (new sites should be added here and to
+# docs/robustness.md, but an entry for a site that never probes is inert).
+SITES: Tuple[str, ...] = (
+    "page_pool.alloc",
+    "dispatch.execute",
+    "kernel.paged_attn",
+    "scheduler.iter",
+)
+
+_C_INJECTED = _om.counter("fault.injected")
+
+
+class InjectedFault(RuntimeError):
+    """Raised by an armed fault site.  Carries the site name, the 1-based
+    injection ordinal at that site, and the probe's context kwargs."""
+
+    def __init__(self, site: str, hit: int, ctx: Optional[Dict] = None):
+        self.site = site
+        self.hit = hit
+        self.ctx = dict(ctx or {})
+        detail = f" {self.ctx}" if self.ctx else ""
+        super().__init__(f"injected fault at {site} (hit #{hit}){detail}")
+
+
+@dataclasses.dataclass
+class FaultRule:
+    """One parsed schedule entry.  ``seen``/``fired`` are per-rule counters
+    over *matching* probes, so ``iter``/``n`` schedules on a filtered rule
+    count only the probes the filter admits."""
+
+    site: str
+    match: Optional[str] = None
+    iters: frozenset = frozenset()
+    n: int = 0
+    p: float = 0.0
+    seen: int = 0
+    fired: int = 0
+
+    def applies(self, ctx: Dict) -> bool:
+        if self.match is None:
+            return True
+        return any(self.match == str(v) for v in ctx.values())
+
+    def wants(self, rng: random.Random) -> bool:
+        """Advance this rule's probe counter; True if it schedules a fault
+        now.  The RNG is always consulted for ``p`` rules so the draw
+        sequence (hence determinism) is independent of other rules firing."""
+        i = self.seen
+        self.seen += 1
+        fire = i in self.iters or i < self.n
+        if self.p > 0.0:
+            fire = (rng.random() < self.p) or fire
+        return fire
+
+
+class FaultPlan:
+    """A set of :class:`FaultRule` plus the seeded RNG and hit bookkeeping."""
+
+    def __init__(self, rules: List[FaultRule], seed: int = 0,
+                 spec: str = ""):
+        self.rules = list(rules)
+        self.seed = int(seed)
+        self.spec = spec
+        self._rng = random.Random(self.seed)
+        self.probes: Dict[str, int] = {}
+        self.fired: Dict[str, int] = {}
+
+    def probe(self, site: str, ctx: Dict) -> None:
+        """Count one probe of ``site``; raise :class:`InjectedFault` if any
+        matching rule schedules a fault for it."""
+        self.probes[site] = self.probes.get(site, 0) + 1
+        hit: Optional[FaultRule] = None
+        for rule in self.rules:
+            if rule.site != site or not rule.applies(ctx):
+                continue
+            if rule.wants(self._rng) and hit is None:
+                hit = rule
+        if hit is None:
+            return
+        hit.fired += 1
+        self.fired[site] = self.fired.get(site, 0) + 1
+        _C_INJECTED.inc()
+        _ot.instant("fault.inject", site=site, hit=self.fired[site],
+                    rule=hit.match or "*", **{k: str(v) for k, v in ctx.items()})
+        raise InjectedFault(site, self.fired[site], ctx)
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return f"FaultPlan({self.spec!r}, seed={self.seed}, fired={self.fired})"
+
+
+def parse_spec(spec: str, seed: int = 0) -> FaultPlan:
+    """Parse the ``REPRO_FAULTS`` grammar into a :class:`FaultPlan`."""
+    rules: List[FaultRule] = []
+    for entry in spec.split(","):
+        entry = entry.strip()
+        if not entry:
+            continue
+        site, sep, sched = entry.partition(":")
+        if not sep or not site:
+            raise ValueError(
+                f"fault entry {entry!r}: expected 'site:kind=value'")
+        match = None
+        if "@" in site:
+            site, match = site.split("@", 1)
+            if not site or not match:
+                raise ValueError(f"fault entry {entry!r}: bad '@' filter")
+        kind, sep, value = sched.partition("=")
+        if not sep:
+            raise ValueError(f"fault entry {entry!r}: expected 'kind=value'")
+        try:
+            if kind == "iter":
+                rule = FaultRule(site, match, iters=frozenset({int(value)}))
+            elif kind == "n":
+                rule = FaultRule(site, match, n=int(value))
+            elif kind == "p":
+                rule = FaultRule(site, match, p=float(value))
+            else:
+                raise ValueError(
+                    f"fault entry {entry!r}: unknown schedule kind {kind!r} "
+                    f"(use iter=K, n=K, or p=F)")
+        except (TypeError, ValueError) as e:
+            if "unknown schedule kind" in str(e):
+                raise
+            raise ValueError(f"fault entry {entry!r}: bad value {value!r}")
+        if rule.p < 0.0 or rule.p > 1.0:
+            raise ValueError(f"fault entry {entry!r}: p outside [0, 1]")
+        rules.append(rule)
+    return FaultPlan(rules, seed=seed, spec=spec)
+
+
+# module-global fast path: maybe_fail reads one bool while injection is off
+_ENABLED: bool = False
+_PLAN: Optional[FaultPlan] = None
+
+
+def enabled() -> bool:
+    """Is a fault plan armed?  The single gate every probe checks first."""
+    return _ENABLED
+
+
+def plan() -> Optional[FaultPlan]:
+    """The armed plan (its per-site ``probes``/``fired`` counters are the
+    post-mortem view a chaos test asserts against), or None."""
+    return _PLAN
+
+
+def install(spec, seed: Optional[int] = None) -> FaultPlan:
+    """Arm a fault plan process-wide.  ``spec`` is a grammar string or a
+    ready :class:`FaultPlan`; returns the installed plan."""
+    global _ENABLED, _PLAN
+    if isinstance(spec, FaultPlan):
+        p = spec
+    else:
+        p = parse_spec(str(spec), seed=0 if seed is None else seed)
+    _PLAN = p
+    _ENABLED = bool(p.rules)
+    return p
+
+
+def uninstall() -> None:
+    """Disarm injection (probes return to the one-bool fast path)."""
+    global _ENABLED, _PLAN
+    _ENABLED = False
+    _PLAN = None
+
+
+def configure() -> Optional[FaultPlan]:
+    """(Re-)read ``REPRO_FAULTS`` / ``REPRO_FAULTS_SEED`` from the
+    environment; arms a plan when the spec is non-empty, disarms otherwise."""
+    spec = os.environ.get("REPRO_FAULTS", "").strip()
+    if not spec:
+        uninstall()
+        return None
+    try:
+        seed = int(os.environ.get("REPRO_FAULTS_SEED", "0"))
+    except ValueError:
+        seed = 0
+    return install(spec, seed=seed)
+
+
+@contextlib.contextmanager
+def fault_scope(spec, seed: int = 0):
+    """Arm ``spec`` inside this scope only; restores the previous plan (or
+    disarmed state) on exit.  Yields the :class:`FaultPlan` so the body can
+    assert on its ``fired``/``probes`` counters."""
+    global _ENABLED, _PLAN
+    prev = (_ENABLED, _PLAN)
+    p = install(spec, seed=seed)
+    try:
+        yield p
+    finally:
+        _ENABLED, _PLAN = prev
+
+
+def maybe_fail(site: str, **ctx) -> None:
+    """Probe a fault site.  No-op unless a plan is armed; raises
+    :class:`InjectedFault` when the armed plan schedules a fault here."""
+    if not _ENABLED:
+        return
+    _PLAN.probe(site, ctx)
+
+
+# arm from the environment at import, mirroring REPRO_OBS: a subprocess
+# started with REPRO_FAULTS=... runs chaos without any code changes
+configure()

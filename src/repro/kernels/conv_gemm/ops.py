@@ -238,8 +238,13 @@ def _conv_plan_forward(x_cnhw, values, idx, kh, kw, stride, pad, v, impl):
         c, h, w, n_tiles * tile, kh, kw, stride, pad, k_kept, tile,
         v=v, dtype=x_cnhw.dtype, batch=b, phase=_dispatch.current_phase())
     spec = _dispatch.best_impl(key, param_keys=("values", "idx"), force=impl)
-    return spec.apply({"values": values, "idx": idx}, x_cnhw,
-                      kh=kh, kw=kw, stride=stride, pad=pad, v=v)
+    # execution guard: a failing rung is quarantined and the plan re-resolves
+    # down the ladder (ultimately the XLA reference) instead of crashing
+    return _dispatch.run_guarded(
+        key, spec,
+        lambda s: s.apply({"values": values, "idx": idx}, x_cnhw,
+                          kh=kh, kw=kw, stride=stride, pad=pad, v=v),
+        param_keys=("values", "idx"))
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8))

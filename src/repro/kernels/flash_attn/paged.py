@@ -251,7 +251,8 @@ def paged_attention(q, k_new, v_new, k_pages, v_pages, tables, lengths, *,
     routes to the winning implementation; the XLA gather reference is the
     universal fallback.
     """
-    from repro.dispatch import best_impl, current_phase, paged_attn_key
+    from repro import fault as _fault
+    from repro.dispatch import best_impl, current_phase, paged_attn_key, run_guarded
 
     b, sq, h, d = q.shape
     kv = k_pages.shape[2]
@@ -260,13 +261,21 @@ def paged_attention(q, k_new, v_new, k_pages, v_pages, tables, lengths, *,
         kv_capacity=tables.shape[1] * page_size, page_size=page_size,
         dtype=q.dtype, phase=current_phase())
     spec = best_impl(key, force=impl)
-    if spec is not None and spec.backend == "pallas":
-        return paged_attention_pallas(
-            q, k_new, v_new, k_pages, v_pages, tables, lengths,
-            page_size=page_size, block_q=spec.geom("bq", 8),
-            interpret=should_interpret())
-    return paged_attention_ref(q, k_new, v_new, k_pages, v_pages, tables,
-                               lengths)
+
+    def _run(s):
+        # kernel-specific fault site (probes at trace time, like the kernel
+        # failures it stands in for); a hit quarantines the current rung and
+        # run_guarded re-resolves — the XLA gather reference is the floor
+        _fault.maybe_fail("kernel.paged_attn", impl=s.name, phase=key.phase)
+        if s is not None and s.backend == "pallas":
+            return paged_attention_pallas(
+                q, k_new, v_new, k_pages, v_pages, tables, lengths,
+                page_size=page_size, block_q=s.geom("bq", 8),
+                interpret=should_interpret())
+        return paged_attention_ref(q, k_new, v_new, k_pages, v_pages, tables,
+                                   lengths)
+
+    return run_guarded(key, spec, _run)
 
 
 def paged_kernel_available() -> bool:

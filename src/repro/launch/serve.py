@@ -22,6 +22,19 @@ races the registered page-size geometries for the serving shape:
 
     PYTHONPATH=src python -m repro.launch.serve --arch smollm-360m --smoke \
         --continuous --paged --page-size 8 --requests 12 --slots 4
+
+Robustness knobs (``docs/robustness.md``): ``--deadline-s`` stamps every
+trace request with a deadline, ``--faults SPEC`` installs the seeded
+fault-injection plan (``repro.fault`` grammar, e.g.
+``page_pool.alloc:n=2,scheduler.iter:iter=3``), ``--alloc grow`` switches the
+paged tier to grow-on-demand allocation with preemption-restore, and SIGTERM
+(or Ctrl-C) drains gracefully: admissions stop, in-flight requests finish,
+queued ones flush as cancelled.  A scheduler-iteration watchdog
+(``--watchdog-s``) aborts a wedged serve loop:
+
+    PYTHONPATH=src python -m repro.launch.serve --arch smollm-360m --smoke \
+        --continuous --paged --alloc grow --deadline-s 30 \
+        --faults 'page_pool.alloc:p=0.05' --requests 12 --slots 4
 """
 from __future__ import annotations
 
@@ -30,17 +43,20 @@ import argparse
 import jax
 import numpy as np
 
+from repro import fault as rfault
 from repro import obs
 from repro.configs import get_config, smoke_config
 from repro.core.pruning import SparsityConfig
 from repro.models import registry as reg
 from repro.serve import (
+    STATUSES,
     Engine,
     Scheduler,
     ServeConfig,
     latency_percentiles,
     synthetic_trace,
 )
+from repro.train.fault import PreemptionGuard, StepWatchdog
 
 
 def build_engine(args) -> Engine:
@@ -76,15 +92,38 @@ def run_continuous(args) -> None:
         args.requests, seed=0, vocab=cfg.vocab_size,
         prompt_lens=(max(args.prompt_len // 4, 1), args.prompt_len),
         new_tokens=(max(args.new_tokens // 4, 1), args.new_tokens))
+    if args.deadline_s is not None:
+        for r in trace:
+            r.deadline_s = args.deadline_s
     sched = Scheduler(eng, n_slots=args.slots, prefill_chunk=args.prefill_chunk,
-                      paged=args.paged, page_size=args.page_size)
+                      paged=args.paged, page_size=args.page_size,
+                      kv_budget_rows=args.kv_budget_rows, alloc=args.alloc)
     log = print if args.trace == "" else None
-    completions = sched.run(trace, log_fn=log)
+    # SIGTERM/SIGINT -> graceful drain (finish in-flight, flush the queue);
+    # the watchdog aborts the process if no scheduler iteration completes
+    # inside the window (wedged decode step / hung runtime)
+    guard = PreemptionGuard().install()
+    dog = StepWatchdog(timeout_s=args.watchdog_s).start()
+    try:
+        completions = sched.run(trace, log_fn=log,
+                                should_drain=lambda: guard.requested,
+                                heartbeat=dog.beat)
+    finally:
+        dog.stop()
+        guard.uninstall()
     stats = sched.stats
     p50, p99 = latency_percentiles(completions)
-    mode = f"paged(page_size={sched.page_size})" if args.paged else "contiguous"
+    mode = f"paged(page_size={sched.page_size},alloc={args.alloc})" \
+        if args.paged else "contiguous"
     print(f"arch={cfg.name} sparse={args.sparsity} continuous kv={mode} "
           f"slots={args.slots} requests={len(completions)}")
+    by_status = " ".join(
+        f"{s}={int(stats[f'retired_{s}'])}" for s in STATUSES
+        if stats[f"retired_{s}"])
+    print(f"status: {by_status or 'none'}; "
+          f"preemptions {int(stats['preemptions'])}, "
+          f"iter faults {int(stats['iter_faults'])}"
+          + (" [drained]" if guard.requested else ""))
     print(f"decode {stats['decode_tok_s']:.1f} tok/s "
           f"({stats['generated_tokens']} tokens, "
           f"{stats['decode_steps']} steps); "
@@ -134,6 +173,26 @@ def main():
                     help="KV rows per page; default lets "
                          "dispatch.choose_page_size race the registered "
                          "page-size geometries for this serving shape")
+    ap.add_argument("--kv-budget-rows", type=int, default=None,
+                    help="total physical KV rows for the paged pool "
+                         "(default: slots * max_len)")
+    ap.add_argument("--alloc", choices=("reserve", "grow"), default="reserve",
+                    help="paged allocation policy: reserve prompt+budget up "
+                         "front, or grow on demand with preemption-restore "
+                         "on exhaustion")
+    ap.add_argument("--deadline-s", type=float, default=None,
+                    help="per-request deadline (seconds from submission) "
+                         "stamped onto every trace request; expiry retires "
+                         "with status=timeout")
+    ap.add_argument("--faults", default=None, metavar="SPEC",
+                    help="seeded fault-injection plan, repro.fault grammar "
+                         "(e.g. 'page_pool.alloc:n=2,kernel.paged_attn:"
+                         "iter=0')")
+    ap.add_argument("--faults-seed", type=int, default=0,
+                    help="seed for probabilistic (p=) fault rules")
+    ap.add_argument("--watchdog-s", type=float, default=300.0,
+                    help="scheduler-iteration watchdog: abort the process "
+                         "if no iteration completes within this window")
     ap.add_argument("--trace", nargs="?", const="", default=None,
                     metavar="PATH",
                     help="bare: print per-request admit/retire events; "
@@ -143,15 +202,24 @@ def main():
     if args.paged and not args.continuous:
         raise SystemExit("--paged requires --continuous (the static engine "
                          "uses the contiguous per-batch cache)")
+    if (args.alloc != "reserve" or args.deadline_s is not None) \
+            and not args.continuous:
+        raise SystemExit("--alloc/--deadline-s require --continuous")
     trace_path = args.trace if args.trace else None
     if trace_path:
         obs.set_enabled(True)
+    if args.faults:
+        rfault.install(args.faults, seed=args.faults_seed)
     try:
         if args.continuous:
             run_continuous(args)
         else:
             run_static(args)
     finally:
+        if args.faults:
+            print(f"faults: fired {dict(rfault.plan().fired)} "
+                  f"of probes {dict(rfault.plan().probes)}")
+            rfault.uninstall()
         if trace_path:
             _finish_trace(trace_path)
 

@@ -8,6 +8,7 @@ from repro.serve.kv_pages import (  # noqa: F401
 )
 from repro.serve.kv_slots import Slot, SlotError, SlotPool  # noqa: F401
 from repro.serve.scheduler import (  # noqa: F401
+    STATUSES,
     Completion,
     Request,
     RequestQueue,

@@ -32,6 +32,7 @@ from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
+from repro import fault as _fault
 from repro.obs import metrics as _om
 from repro.obs import trace as _ot
 
@@ -136,6 +137,11 @@ class PagePool:
         """Reserve pages for ``n_rows`` logical rows under ``seq_id``."""
         if seq_id in self._tables:
             raise PageError(f"seq {seq_id} already holds a page table")
+        # fault site fires BEFORE any mutation, so an injected allocation
+        # failure is indistinguishable from real exhaustion to callers and
+        # can never leave a half-mapped table behind
+        _fault.maybe_fail("page_pool.alloc", seq=seq_id, rows=int(n_rows),
+                          kind="alloc")
         need = self.pages_for(n_rows)
         if need > len(self._free):
             raise PageError(
@@ -161,6 +167,10 @@ class PagePool:
         need = self.pages_for(n_rows) - len(table.pages)
         if need <= 0:
             return table
+        # probes only when the grow actually claims a page, so row-level
+        # growth inside an already-mapped page never consults the plan
+        _fault.maybe_fail("page_pool.alloc", seq=seq_id, rows=int(n_rows),
+                          kind="grow")
         if need > len(self._free):
             raise PageError(
                 f"cannot grow seq {seq_id} by {need} pages: "
@@ -184,6 +194,30 @@ class PagePool:
                 f"{table.capacity}")
         table.pos = new_pos
         return new_pos
+
+    def release_unused(self, seq_id: int) -> int:
+        """Return ``seq_id``'s reserved-but-unwritten tail pages to the free
+        list, keeping only the pages its write position actually covers.
+
+        Under the scheduler's ``alloc="reserve"`` policy an EOS-early request
+        holds its full prompt+budget reservation until retire; calling this
+        at retire time measures (and reclaims) that stranded tail. Returns
+        the number of pages released (0 when the mapping is exactly sized).
+        """
+        table = self._get(seq_id)
+        keep = self.pages_for(table.pos)
+        n_rel = len(table.pages) - keep
+        if n_rel <= 0:
+            return 0
+        released = table.pages[keep:]
+        del table.pages[keep:]
+        table._capacity = keep * self.page_size
+        self._free.extend(reversed(released))
+        self.check_invariants()
+        self._set_gauges()
+        _ot.instant("serve.page_release", seq=seq_id, pages=n_rel,
+                    free=len(self._free))
+        return n_rel
 
     def free(self, seq_id: int) -> None:
         """Return all of ``seq_id``'s pages to the free list."""

@@ -1,0 +1,442 @@
+"""Seeded chaos suite for the fault-tolerant serving runtime.
+
+Covers the fault-injection registry itself (grammar, determinism, scoping),
+the request lifecycle (deadline, cancel, drain, preempt-restore), the
+EOS-early page-stranding accounting, and randomized fault schedules over both
+KV tiers — asserting the invariants the robustness work promises: every
+request ends at exactly one terminal status, no page or slot leaks, and
+fault-free requests are token-identical to a no-fault run.
+"""
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import jax
+import numpy as np
+import pytest
+
+from repro import fault
+from repro.configs import smoke_config
+from repro.core.pruning import SparsityConfig
+from repro.models import registry as reg
+from repro.serve import (
+    STATUSES,
+    Engine,
+    PagePool,
+    Request,
+    Scheduler,
+    ServeConfig,
+)
+
+REPO = Path(__file__).resolve().parent.parent
+
+
+# ---------------------------------------------------------------------------
+# Fault-injection registry (no engine needed)
+# ---------------------------------------------------------------------------
+
+
+class TestFaultRegistry:
+    def test_off_by_default_and_zero_cost_path(self):
+        assert not fault.enabled()
+        assert fault.plan() is None
+        fault.maybe_fail("page_pool.alloc", seq=0)  # no-op, no plan
+
+    def test_parse_grammar(self):
+        p = fault.parse_spec(
+            "page_pool.alloc:iter=3, dispatch.execute@compressed_xla:n=2,"
+            "scheduler.iter:p=0.25")
+        assert len(p.rules) == 3
+        assert p.rules[0].iters == frozenset({3})
+        assert p.rules[1].match == "compressed_xla" and p.rules[1].n == 2
+        assert p.rules[2].p == 0.25
+
+    @pytest.mark.parametrize("bad", [
+        "page_pool.alloc", "site:", "site:iter=x", "site:p=1.5",
+        "site:frob=1", "@m:n=1",
+    ])
+    def test_parse_rejects(self, bad):
+        with pytest.raises(ValueError):
+            fault.parse_spec(bad)
+
+    def test_iter_rule_fires_exactly_kth_probe(self):
+        with fault.fault_scope("scheduler.iter:iter=2") as plan:
+            fault.maybe_fail("scheduler.iter")
+            fault.maybe_fail("scheduler.iter")
+            with pytest.raises(fault.InjectedFault) as ei:
+                fault.maybe_fail("scheduler.iter")
+            assert ei.value.site == "scheduler.iter" and ei.value.hit == 1
+            fault.maybe_fail("scheduler.iter")  # past K: never again
+        assert plan.probes["scheduler.iter"] == 4
+        assert plan.fired["scheduler.iter"] == 1
+
+    def test_n_rule_fires_first_k(self):
+        with fault.fault_scope("page_pool.alloc:n=2") as plan:
+            for _ in range(2):
+                with pytest.raises(fault.InjectedFault):
+                    fault.maybe_fail("page_pool.alloc")
+            fault.maybe_fail("page_pool.alloc")
+        assert plan.fired["page_pool.alloc"] == 2
+
+    def test_match_filters_on_ctx_values(self):
+        with fault.fault_scope("dispatch.execute@pallas:n=9") as plan:
+            fault.maybe_fail("dispatch.execute", impl="xla")
+            with pytest.raises(fault.InjectedFault):
+                fault.maybe_fail("dispatch.execute", impl="pallas")
+        assert plan.fired["dispatch.execute"] == 1
+
+    def test_p_rule_deterministic_under_seed(self):
+        def firing(seed):
+            fired = []
+            with fault.fault_scope("scheduler.iter:p=0.5", seed=seed):
+                for i in range(32):
+                    try:
+                        fault.maybe_fail("scheduler.iter", it=i)
+                        fired.append(False)
+                    except fault.InjectedFault:
+                        fired.append(True)
+            return fired
+
+        a, b = firing(7), firing(7)
+        assert a == b and any(a) and not all(a)
+
+    def test_scope_restores_previous_state(self):
+        outer = fault.install("scheduler.iter:n=1")
+        try:
+            with fault.fault_scope("page_pool.alloc:n=1"):
+                assert fault.plan().spec == "page_pool.alloc:n=1"
+            assert fault.plan() is outer
+        finally:
+            fault.uninstall()
+        assert not fault.enabled()
+
+    def test_configure_from_env(self, monkeypatch):
+        monkeypatch.setenv("REPRO_FAULTS", "scheduler.iter:n=1")
+        monkeypatch.setenv("REPRO_FAULTS_SEED", "3")
+        p = fault.configure()
+        assert fault.enabled() and p.seed == 3
+        monkeypatch.delenv("REPRO_FAULTS")
+        fault.configure()
+        assert not fault.enabled()
+
+
+# ---------------------------------------------------------------------------
+# PagePool: injected exhaustion + reservation release
+# ---------------------------------------------------------------------------
+
+
+class TestPagePoolFaults:
+    def test_alloc_fault_leaves_pool_unmutated(self):
+        pool = PagePool(n_pages=4, page_size=4)
+        with fault.fault_scope("page_pool.alloc:n=1"):
+            with pytest.raises(fault.InjectedFault):
+                pool.alloc(0, 8)
+        assert pool.n_free == 4 and pool.n_seqs == 0
+        pool.alloc(0, 8)  # recovers normally once the schedule is spent
+        pool.check_invariants()
+
+    def test_grow_fault_only_when_claiming_pages(self):
+        pool = PagePool(n_pages=4, page_size=4)
+        pool.alloc(0, 4)
+        with fault.fault_scope("page_pool.alloc@grow:n=1") as plan:
+            pool.grow(0, 3)  # within the mapped page: no probe
+            assert plan.fired.get("page_pool.alloc") is None
+            with pytest.raises(fault.InjectedFault):
+                pool.grow(0, 5)  # needs a second page -> probes
+        pool.check_invariants()
+
+    def test_release_unused_returns_reserved_tail(self):
+        pool = PagePool(n_pages=8, page_size=4)
+        pool.alloc(0, 24)  # 6 pages reserved
+        pool.advance(0, 6)  # ... but only 6 rows (2 pages) ever written
+        assert pool.release_unused(0) == 4
+        assert pool.n_free == 6
+        assert pool.table(0).capacity == 8
+        assert pool.release_unused(0) == 0  # idempotent
+        pool.free(0)
+        assert pool.n_free == 8
+        pool.check_invariants()
+
+
+# ---------------------------------------------------------------------------
+# Scheduler lifecycle + chaos (engine-backed)
+# ---------------------------------------------------------------------------
+
+
+def _smoke_cfg(arch="smollm-360m", sparsity=0.5):
+    scfg = SparsityConfig(sparsity=sparsity, m=None, tile=None,
+                          format="compressed_xla", min_dim=64)
+    return smoke_config(arch).with_(sparsity=scfg)
+
+
+@pytest.fixture(scope="module")
+def engine():
+    cfg = _smoke_cfg()
+    params, _ = reg.init_params(cfg, jax.random.PRNGKey(0))
+    return Engine(cfg, params, ServeConfig(max_new_tokens=16))
+
+
+@pytest.fixture(autouse=True)
+def _no_leftover_faults():
+    yield
+    fault.uninstall()
+
+
+def _trace(engine, n, *, prompt=6, budget=6, seed=0, **kw):
+    rng = np.random.default_rng(seed)
+    return [Request(uid=i,
+                    prompt=rng.integers(0, engine.cfg.vocab_size,
+                                        (prompt,)).astype(np.int32),
+                    max_new_tokens=budget, **kw)
+            for i in range(n)]
+
+
+def _by_uid(completions):
+    return {c.uid: c for c in completions}
+
+
+class TestLifecycle:
+    def test_deadline_expires_queued_and_inflight(self, engine):
+        reqs = _trace(engine, 4)
+        reqs[3].deadline_s = 1e-6  # expired before it can ever admit
+        sched = Scheduler(engine, n_slots=2, paged=True, page_size=4,
+                          max_len=16)
+        comps = _by_uid(sched.run(reqs))
+        assert comps[3].status == "timeout" and comps[3].n_generated == 0
+        assert all(comps[u].status == "ok" for u in (0, 1, 2))
+        assert sched.stats["retired_timeout"] == 1
+        assert sched.stats["retired_ok"] == 3
+
+    def test_cancel_queued_request(self, engine):
+        sched = Scheduler(engine, n_slots=2, paged=True, page_size=4,
+                          max_len=16)
+        sched.cancel(2)
+        comps = _by_uid(sched.run(_trace(engine, 4)))
+        assert comps[2].status == "cancelled"
+        assert sum(1 for c in comps.values() if c.status == "ok") == 3
+
+    def test_cancel_inflight_midrun(self, engine):
+        sched = Scheduler(engine, n_slots=2, paged=True, page_size=4,
+                          max_len=24)
+        gen = sched.run_iter(_trace(engine, 2, budget=12))
+        # cancel uid 0 after the run has started (both are in flight)
+        sched.cancel(0)
+        comps = _by_uid(list(gen))
+        assert comps[0].status == "cancelled"
+        assert comps[0].n_generated < 12  # cut short, partial tokens kept
+        assert comps[1].status == "ok"
+
+    def test_drain_finishes_inflight_flushes_queue(self, engine):
+        sched = Scheduler(engine, n_slots=2, paged=True, page_size=4,
+                          max_len=16)
+        draining = {"on": False}
+        gen = sched.run_iter(_trace(engine, 6, budget=8),
+                             should_drain=lambda: draining["on"])
+        first = next(gen)
+        draining["on"] = True
+        rest = list(gen)
+        comps = _by_uid([first] + rest)
+        assert len(comps) == 6  # every request reached a terminal status
+        ok = [u for u, c in comps.items() if c.status == "ok"]
+        flushed = [u for u, c in comps.items() if c.status == "cancelled"]
+        assert flushed and ok  # some drained away, in-flight ones finished
+        assert sched.stats["retired_cancelled"] == len(flushed)
+
+    def test_heartbeat_called_every_iteration(self, engine):
+        beats = []
+        sched = Scheduler(engine, n_slots=2, paged=True, page_size=4,
+                          max_len=16)
+        sched.run(_trace(engine, 2), heartbeat=lambda: beats.append(1))
+        assert len(beats) >= sched.stats["decode_steps"] >= 1
+
+
+class TestPreemptRestore:
+    def test_grow_preempts_and_restores_token_identical(self, engine):
+        baseline = Scheduler(engine, n_slots=2, paged=True, page_size=4,
+                             max_len=16)
+        want = _by_uid(baseline.run(_trace(engine, 4)))
+        # 16-row budget = 4 pages for 2 slots of growing sequences: forces
+        # real exhaustion-driven preemption
+        tight = Scheduler(engine, n_slots=2, paged=True, page_size=4,
+                          max_len=16, kv_budget_rows=16, alloc="grow")
+        got = _by_uid(tight.run(_trace(engine, 4)))
+        assert tight.stats["preemptions"] >= 1
+        assert all(c.status == "ok" for c in got.values())
+        for uid, c in want.items():
+            np.testing.assert_array_equal(got[uid].tokens, c.tokens)
+
+    def test_injected_exhaustion_preempts(self, engine):
+        sched = Scheduler(engine, n_slots=2, paged=True, page_size=4,
+                          max_len=16, alloc="grow")
+        with fault.fault_scope("page_pool.alloc@grow:iter=2"):
+            comps = _by_uid(sched.run(_trace(engine, 3)))
+        assert sched.stats["preemptions"] >= 1
+        assert all(c.status == "ok" for c in comps.values())
+
+    def test_restore_budget_exhausts_to_failed(self, engine):
+        sched = Scheduler(engine, n_slots=1, paged=True, page_size=4,
+                          max_len=16, alloc="grow", max_restores=1)
+        # every grow-time page claim fails: the only sequence preempts once
+        # (restore #1), then hits the restore budget and fails terminally
+        with fault.fault_scope("page_pool.alloc@grow:n=99"):
+            comps = _by_uid(sched.run(_trace(engine, 1, prompt=3, budget=8)))
+        assert comps[0].status == "failed"
+        assert sched.stats["preemptions"] == 1
+
+
+class TestEOSStranding:
+    def _eos_from_free_run(self, engine, reqs):
+        sched = Scheduler(engine, n_slots=2, paged=True, page_size=4,
+                          max_len=24)
+        free = _by_uid(sched.run([Request(r.uid, r.prompt.copy(),
+                                          r.max_new_tokens) for r in reqs]))
+        # a token some request emits early: with eos set, that request
+        # retires well inside its reserved budget
+        return int(free[0].tokens[1]), free
+
+    def test_reserve_strands_grow_does_not(self, engine):
+        reqs = _trace(engine, 4, prompt=4, budget=16)
+        eos, _free = self._eos_from_free_run(engine, reqs)
+        engine.scfg.eos_id = eos
+        try:
+            reserve = Scheduler(engine, n_slots=2, paged=True, page_size=4,
+                                max_len=24)
+            r_comps = reserve.run(_trace(engine, 4, prompt=4, budget=16))
+            grow = Scheduler(engine, n_slots=2, paged=True, page_size=4,
+                            max_len=24, alloc="grow")
+            g_comps = grow.run(_trace(engine, 4, prompt=4, budget=16))
+        finally:
+            engine.scfg.eos_id = None
+        assert any(c.n_generated < c.tokens.shape[0] or
+                   c.n_generated < 16 for c in r_comps)  # EOS fired early
+        # reserve measured the unused reservation; grow never created one
+        assert reserve.page_stats["pages_stranded"] > 0
+        assert grow.page_stats["pages_stranded"] == 0
+        # grow maps pages only as decode reaches them, so its footprint
+        # never exceeds reserve's upfront worst case (it ties only when
+        # every live request runs its full budget anyway)
+        assert grow.page_stats["pages_peak"] <= \
+            reserve.page_stats["pages_peak"]
+        # identical generations either way
+        for a, b in zip(sorted(r_comps, key=lambda c: c.uid),
+                        sorted(g_comps, key=lambda c: c.uid)):
+            np.testing.assert_array_equal(a.tokens, b.tokens)
+
+    def test_invariant_no_pages_leak_after_eos_early_run(self, engine):
+        reqs = _trace(engine, 4, prompt=4, budget=16)
+        eos, _ = self._eos_from_free_run(engine, reqs)
+        engine.scfg.eos_id = eos
+        try:
+            sched = Scheduler(engine, n_slots=2, paged=True, page_size=4,
+                              max_len=24)
+            sched.run(_trace(engine, 4, prompt=4, budget=16))
+        finally:
+            engine.scfg.eos_id = None
+        # run_iter's final check_invariants already ran; the gauges must
+        # show an empty pool (nothing still mapped after all retires)
+        assert sched.page_stats["pages_active"] == 0
+
+
+class TestChaos:
+    """Randomized seeded fault schedules over both KV tiers."""
+
+    SPEC = "page_pool.alloc:p=0.25,scheduler.iter:p=0.15"
+
+    def _run(self, engine, *, seed, paged, alloc="reserve"):
+        kw = dict(paged=paged, max_len=16)
+        if paged:
+            kw.update(page_size=4, alloc=alloc)
+        sched = Scheduler(engine, n_slots=2, **kw)
+        with fault.fault_scope(self.SPEC, seed=seed) as plan:
+            comps = sched.run(_trace(engine, 6))
+        return sched, comps, plan
+
+    @pytest.mark.parametrize("seed", [0, 1, 2])
+    @pytest.mark.parametrize("mode", ["contiguous", "reserve", "grow"])
+    def test_all_terminal_no_leaks_survivors_identical(self, engine, seed,
+                                                       mode):
+        baseline = Scheduler(engine, n_slots=2, paged=True, page_size=4,
+                             max_len=16)
+        want = _by_uid(baseline.run(_trace(engine, 6)))
+        sched, comps, plan = self._run(
+            engine, seed=seed, paged=mode != "contiguous",
+            alloc="grow" if mode == "grow" else "reserve")
+        by_uid = _by_uid(comps)
+        # 1. every request reached exactly one terminal status
+        assert sorted(by_uid) == list(range(6))
+        assert all(c.status in STATUSES for c in comps)
+        stats = sched.stats
+        assert sum(stats[f"retired_{s}"] for s in STATUSES) == 6
+        # 2. no page/slot leaks (run_iter's end-of-run check_invariants
+        #    already threw if the free/mapped partition broke)
+        if mode != "contiguous":
+            assert sched.page_stats["pages_active"] == 0
+        # 3. fault-free survivors are token-identical to the no-fault run
+        for uid, c in by_uid.items():
+            if c.status == "ok":
+                np.testing.assert_array_equal(
+                    c.tokens, want[uid].tokens,
+                    err_msg=f"uid {uid} diverged under chaos (seed {seed})")
+
+    def test_chaos_is_replayable(self, engine):
+        """Same spec + same seed -> bit-identical statuses and counters."""
+        runs = []
+        for _ in range(2):
+            sched, comps, plan = self._run(engine, seed=5, paged=True)
+            runs.append((
+                tuple((c.uid, c.status, tuple(c.tokens.tolist()))
+                      for c in sorted(comps, key=lambda c: c.uid)),
+                dict(plan.fired)))
+        assert runs[0] == runs[1]
+
+    def test_decode_unservable_fails_inflight_not_wedges(self, engine):
+        """Exhausting the paged-attention ladder at decode trace time must
+        terminally fail the in-flight requests, not hang the loop or leak."""
+        from repro import dispatch
+
+        sched = Scheduler(engine, n_slots=3, paged=True, page_size=4,
+                          max_len=16)
+        try:
+            with fault.fault_scope("kernel.paged_attn@decode:n=99"):
+                comps = _by_uid(sched.run(_trace(engine, 3, budget=4)))
+        finally:
+            dispatch.clear_quarantine()
+        assert all(c.status == "failed" for c in comps.values())
+        assert sched.page_stats["pages_active"] == 0
+
+
+class TestSigtermDrain:
+    def test_launcher_drains_on_sigterm(self):
+        """End-to-end: SIGTERM mid-serve finishes in-flight requests and
+        flushes the queue with terminal statuses instead of dying."""
+        import signal
+
+        env = dict(os.environ, PYTHONPATH=os.path.join(str(REPO), "src"))
+        # bare --trace prints the per-request event log, so the test can
+        # signal as soon as the FIRST admission lands (requests are sized so
+        # most of the trace is still queued at that point)
+        proc = subprocess.Popen(
+            [sys.executable, "-m", "repro.launch.serve", "--arch",
+             "smollm-360m", "--smoke", "--continuous", "--paged",
+             "--page-size", "4", "--requests", "64", "--slots", "2",
+             "--new-tokens", "24", "--trace",
+             "--faults", "scheduler.iter:iter=0"],
+            env=env, stdout=subprocess.PIPE, stderr=subprocess.STDOUT,
+            text=True)
+        lines = []
+        try:
+            for line in proc.stdout:
+                lines.append(line)
+                if "[admit]" in line:
+                    proc.send_signal(signal.SIGTERM)
+                    break
+            out, _ = proc.communicate(timeout=500)
+        except Exception:
+            proc.kill()
+            raise
+        out = "".join(lines) + (out or "")
+        assert proc.returncode == 0, out
+        assert "[drain]" in out, out
+        assert "cancelled=" in out and "[drained]" in out, out
+        assert "status:" in out, out

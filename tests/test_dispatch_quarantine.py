@@ -1,0 +1,220 @@
+"""Dispatch quarantine-degradation: failing candidates are denylisted at
+runtime and the key re-resolves down the ladder — without restarting the
+process, without corrupting the profile DB, and with identical outputs."""
+import dataclasses
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import jax
+import numpy as np
+import pytest
+
+from repro import dispatch, fault
+from repro.core.formats import meta_for, pack_colwise
+from repro.core.pruning import SparsityConfig, colwise_nm_mask
+from repro.core.sparse_linear import linear_apply
+from repro.dispatch import REGISTRY, ProfileDB, linear_key
+
+REPO = Path(__file__).resolve().parent.parent
+
+
+@pytest.fixture
+def db(tmp_path):
+    d = ProfileDB(path=str(tmp_path / "profile.json"))
+    dispatch.set_db(d)
+    yield d
+    dispatch.set_db(None)
+
+
+@pytest.fixture(autouse=True)
+def _clean_quarantine():
+    dispatch.clear_quarantine()
+    yield
+    dispatch.clear_quarantine()
+
+
+def _small_key(phase=None):
+    return linear_key(batch=8, d_in=64, d_out=64, k_kept=32, tile=16,
+                      phase=phase)
+
+
+def _problem(d_in=64, d_out=64, batch=8, sparsity=0.5, tile=16):
+    w = jax.random.normal(jax.random.PRNGKey(0), (d_in, d_out)) / (d_in ** 0.5)
+    x = jax.random.normal(jax.random.PRNGKey(1), (batch, d_in))
+    cfg = SparsityConfig(sparsity, m=None, tile=tile, format="compressed_xla")
+    meta = meta_for(d_in, d_out, cfg)
+    mask = colwise_nm_mask(w, sparsity, tile=meta.tile)
+    values, idx = pack_colwise(w, mask, meta)
+    return x, {"values": values, "idx": idx}
+
+
+class TestQuarantineState:
+    def test_quarantine_and_query(self):
+        assert dispatch.quarantined() == frozenset()
+        assert dispatch.quarantine("linear", "compressed_xla", reason="boom")
+        assert ("linear", "compressed_xla") in dispatch.quarantined()
+        assert dispatch.quarantined("linear") == frozenset({"compressed_xla"})
+        # idempotent: re-quarantining the same pair reports nothing new
+        assert not dispatch.quarantine("linear", "compressed_xla")
+
+    def test_clear_restores(self):
+        dispatch.quarantine("linear", "compressed_xla")
+        dispatch.clear_quarantine()
+        assert dispatch.quarantined() == frozenset()
+
+    def test_quarantined_impl_skipped_by_resolution(self, db):
+        key = _small_key()
+        first = dispatch.best_impl(key, param_keys=("values", "idx"))
+        dispatch.quarantine(key.op, first.name)
+        nxt = dispatch.best_impl(key, param_keys=("values", "idx"))
+        assert nxt.name != first.name
+
+    def test_survives_memoization(self, db):
+        """best_impl memoizes per (key, env); the quarantine generation is
+        part of the memo key, so a quarantine takes effect immediately
+        without any manual cache clearing."""
+        key = _small_key()
+        first = dispatch.best_impl(key, param_keys=("values", "idx"))
+        # prime the memo hard
+        for _ in range(3):
+            assert dispatch.best_impl(
+                key, param_keys=("values", "idx")).name == first.name
+        dispatch.quarantine(key.op, first.name)
+        assert dispatch.best_impl(
+            key, param_keys=("values", "idx")).name != first.name
+        dispatch.clear_quarantine()
+        assert dispatch.best_impl(
+            key, param_keys=("values", "idx")).name == first.name
+
+    def test_never_empties_candidate_set(self, db):
+        """Quarantining every feasible candidate must not strand the op with
+        nothing to run: the filter backs off and resolution proceeds as if
+        no quarantine existed (better a suspect impl than none)."""
+        key = _small_key()
+        for spec in REGISTRY.candidates("linear"):
+            dispatch.quarantine("linear", spec.name)
+        spec = dispatch.best_impl(key, param_keys=("values", "idx"))
+        assert spec.name  # resolved something runnable
+
+    def test_explicit_force_wins_over_quarantine(self, db):
+        dispatch.quarantine("linear", "compressed_pallas")
+        spec = dispatch.best_impl(_small_key(), param_keys=("values", "idx"),
+                                  force="compressed_pallas")
+        assert spec.name == "compressed_pallas"
+
+    def test_env_force_yields_to_quarantine(self, db, monkeypatch):
+        monkeypatch.setenv("REPRO_DISPATCH_FORCE", "compressed_pallas")
+        dispatch.quarantine("linear", "compressed_pallas")
+        spec = dispatch.best_impl(_small_key(), param_keys=("values", "idx"))
+        assert spec.name != "compressed_pallas"
+
+    def test_frozen_db_selection_deterministic_under_quarantine(self, db):
+        """A frozen DB pins the winner; quarantining it degrades down the
+        ladder deterministically (same answer every resolve)."""
+        key = _small_key()
+        db.put(key.token, {"impl": "compressed_pallas", "wall_us": 1.0})
+        assert dispatch.best_impl(
+            key, param_keys=("values", "idx")).name == "compressed_pallas"
+        dispatch.quarantine(key.op, "compressed_pallas")
+        names = {dispatch.best_impl(key, param_keys=("values", "idx")).name
+                 for _ in range(5)}
+        assert len(names) == 1 and "compressed_pallas" not in names
+
+
+class TestRunGuarded:
+    def test_injected_failure_degrades_with_identical_output(self, db):
+        """Fail the resolved winner once via the dispatch.execute fault site:
+        run_guarded quarantines it, re-resolves, and the degraded rung
+        produces the same numbers the fallback produces when forced."""
+        x, params = _problem()
+        key = dispatch.linear_key_from(x.shape, params["values"].shape)
+        winner = dispatch.best_impl(key, param_keys=("values", "idx"))
+        with fault.fault_scope(f"dispatch.execute@{winner.name}:n=1") as plan:
+            y = dispatch.run_guarded(key, winner,
+                                     lambda s: s.apply(params, x),
+                                     param_keys=("values", "idx"))
+        assert plan.fired.get("dispatch.execute") == 1
+        assert winner.name in dispatch.quarantined(key.op)
+        fallback = dispatch.best_impl(key, param_keys=("values", "idx"))
+        assert fallback.name != winner.name
+        np.testing.assert_allclose(
+            np.asarray(y), np.asarray(fallback.apply(params, x)),
+            rtol=1e-5, atol=1e-5)
+        # and the degraded result still matches the healthy winner
+        dispatch.clear_quarantine()
+        np.testing.assert_allclose(
+            np.asarray(y), np.asarray(winner.apply(params, x)),
+            rtol=1e-4, atol=1e-4)
+
+    def test_real_exception_also_quarantines(self, db):
+        key = _small_key()
+        winner = dispatch.best_impl(key, param_keys=("values", "idx"))
+        boom = dataclasses.replace(
+            winner, apply=lambda p, xx: (_ for _ in ()).throw(
+                RuntimeError("kernel crashed")))
+        x, params = _problem()
+        y = dispatch.run_guarded(key, boom, lambda s: s.apply(params, x),
+                                 param_keys=("values", "idx"))
+        assert winner.name in dispatch.quarantined(key.op)
+        assert np.asarray(y).shape == (8, 64)
+
+    def test_raises_when_ladder_exhausted(self, db):
+        x, params = _problem()
+        key = dispatch.linear_key_from(x.shape, params["values"].shape)
+        spec = dispatch.best_impl(key, param_keys=("values", "idx"))
+        with fault.fault_scope("dispatch.execute:n=99"):
+            with pytest.raises(fault.InjectedFault):
+                dispatch.run_guarded(key, spec,
+                                     lambda s: s.apply(params, x),
+                                     param_keys=("values", "idx"))
+        # every feasible candidate was tried and quarantined
+        assert len(dispatch.quarantined(key.op)) >= 2
+
+    def test_linear_apply_routes_through_guard(self, db):
+        """The model-level entry point degrades transparently: a one-shot
+        injected failure changes nothing about the layer's output."""
+        x, params = _problem()
+        y_ref = np.asarray(linear_apply(params, x))
+        dispatch.clear_quarantine()
+        key = dispatch.linear_key_from(x.shape, params["values"].shape)
+        winner = dispatch.best_impl(key, param_keys=("values", "idx"))
+        with fault.fault_scope(f"dispatch.execute@{winner.name}:n=1"):
+            y = np.asarray(linear_apply(params, x))
+        assert winner.name in dispatch.quarantined(key.op)
+        np.testing.assert_allclose(y, y_ref, rtol=1e-4, atol=1e-4)
+
+
+class TestProcessLocality:
+    def test_quarantine_not_persisted_to_db(self, db):
+        """Quarantine is a runtime denylist, not a profiling verdict: the
+        profile DB on disk is unchanged by it, so a restart re-trusts the
+        profiled winner (the failure may have been transient)."""
+        key = _small_key()
+        db.put(key.token, {"impl": "compressed_pallas", "wall_us": 1.0})
+        before = dict(db.get(key.token))
+        dispatch.quarantine(key.op, "compressed_pallas", reason="crash")
+        assert dispatch.best_impl(
+            key, param_keys=("values", "idx")).name != "compressed_pallas"
+        assert dict(db.get(key.token)) == before
+
+    def test_fresh_process_starts_unquarantined(self, db):
+        dispatch.quarantine("linear", "compressed_pallas")
+        db.put(_small_key().token, {"impl": "compressed_pallas",
+                                    "wall_us": 1.0})
+        snippet = (
+            "from repro import dispatch\n"
+            "key = dispatch.linear_key(batch=8, d_in=64, d_out=64, "
+            "k_kept=32, tile=16)\n"
+            "assert dispatch.quarantined() == frozenset()\n"
+            "print(dispatch.best_impl(key, "
+            "param_keys=('values','idx')).name)\n")
+        env = dict(os.environ,
+                   PYTHONPATH=os.path.join(str(REPO), "src"),
+                   REPRO_DISPATCH_DB=str(db.path))
+        r = subprocess.run([sys.executable, "-c", snippet], env=env,
+                           capture_output=True, text=True, timeout=300)
+        assert r.returncode == 0, r.stderr
+        # the restarted process re-trusts the DB-pinned winner
+        assert r.stdout.strip() == "compressed_pallas"

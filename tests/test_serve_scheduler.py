@@ -18,6 +18,7 @@ from repro.core.sparse_linear import linear_init, unbox_tree
 from repro.dispatch import ProfileDB
 from repro.models import registry as reg
 from repro.serve import (
+    STATUSES,
     Engine,
     Request,
     Scheduler,
@@ -350,7 +351,8 @@ STAT_KEYS = {
     "decode_steps", "decode_s", "total_s", "generated_tokens", "requests",
     "completed_requests", "decode_tok_s", "ttft_p50_s", "ttft_p99_s",
     "tpot_p50_s", "tpot_p99_s", "latency_p50_s", "latency_p99_s",
-}
+    "preemptions", "iter_faults",
+} | {f"retired_{s}" for s in STATUSES}
 
 
 class TestStatsLifecycle:
