@@ -1,7 +1,7 @@
 PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 export PYTHONPATH
 
-.PHONY: test bench bench-quick bench-conv serve-smoke serve-smoke-paged obs-smoke train-smoke chaos-smoke ci
+.PHONY: test bench bench-quick bench-conv serve-smoke serve-smoke-paged obs-smoke train-smoke chaos-smoke train-chaos-smoke ci
 
 test:            ## tier-1 test suite
 	python -m pytest -x -q
@@ -38,10 +38,13 @@ obs-smoke:       ## serve --trace writes a Chrome trace; validate its schema
 train-smoke:     ## 2-step resnet-tiny sparse finetune (conv VJP backward path)
 	python -c "from repro.models.vision import train_smoke; train_smoke(steps=2)"
 
+train-chaos-smoke: ## kill a finetune subprocess mid-run, restart, demand bitwise-identical final params
+	python scripts/train_chaos_smoke.py
+
 chaos-smoke:     ## seeded fault-injected paged serve: quarantine-degradation + lifecycle, trace validated
 	@t=$$(mktemp -t repro_chaos_XXXXXX.json); \
 	python scripts/chaos_smoke.py --trace $$t \
 	&& python -m repro.obs.validate $$t; \
 	rc=$$?; rm -f $$t; exit $$rc
 
-ci: test serve-smoke serve-smoke-paged obs-smoke chaos-smoke train-smoke bench-quick bench-conv  ## what scripts/ci.sh runs
+ci: test serve-smoke serve-smoke-paged obs-smoke chaos-smoke train-smoke train-chaos-smoke bench-quick bench-conv  ## what scripts/ci.sh runs

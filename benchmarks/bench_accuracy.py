@@ -142,6 +142,70 @@ def run_conv(dense_steps: int = 160, ft_steps: int = 60, iters=None,
     return out
 
 
+def run_train_resume(steps: int = 8, iters=None, batch: int = 4):
+    """Crash-safe training row: what checkpointing costs and what resuming
+    loses.  Three SparseTrainer runs of the same masked-finetune config:
+    no checkpoints (baseline wall), ckpt_every=1 (overhead %), and an
+    interrupted run (stop at steps/2, fresh process resumes to the budget).
+    The resume-determinism contract makes the third bitwise identical to the
+    first, so the reported accuracy delta is asserted to be exactly 0."""
+    import tempfile
+
+    import jax
+
+    from repro.models import vision
+    from repro.train import SparseTrainConfig, SparseTrainer
+
+    if iters is not None:
+        steps = max(4, int(iters))
+
+    def mk(ckpt_dir=None):
+        return SparseTrainer(SparseTrainConfig(
+            steps=steps, batch=batch, lr=0.05,
+            ckpt_dir=ckpt_dir, ckpt_every=1 if ckpt_dir else 0))
+
+    def accuracy(tr, n=4):
+        vals = []
+        for i in range(n):
+            x, y = vision.synth_batch(tr.cfg, jax.random.PRNGKey(777 + i),
+                                      batch)
+            vals.append(vision.vision_accuracy(tr.params, tr.cfg, x, y))
+        return float(np.mean(vals))
+
+    def per_step_s(out):
+        # drop step 0: it carries the jit compile, not the steady state
+        ss = [h["sec_per_step"] for h in out["history"][1:]]
+        return float(np.mean(ss)) if ss else float("nan")
+
+    base = mk()
+    t_base = per_step_s(base.run())
+
+    with tempfile.TemporaryDirectory() as d:
+        ck = mk(d)
+        t_ck = per_step_s(ck.run())
+    overhead_pct = 100.0 * (t_ck - t_base) / t_base
+
+    with tempfile.TemporaryDirectory() as d:
+        mk(d).run(steps // 2)   # "crash" after half the budget
+        resumed = mk(d)
+        out = resumed.run()     # fresh process: restore + finish
+    assert out["start_step"] == steps // 2
+    identical = all(
+        np.asarray(a).tobytes() == np.asarray(b).tobytes()
+        for a, b in zip(jax.tree_util.tree_leaves(base.params),
+                        jax.tree_util.tree_leaves(resumed.params)))
+    assert identical, "resumed params diverged from the uninterrupted run"
+    delta = accuracy(base) - accuracy(resumed)
+    assert delta == 0.0, f"resume changed accuracy by {delta}"
+    return [
+        row("train_resume.ckpt_overhead", t_ck * 1e6,
+            f"overhead_pct={overhead_pct:+.1f} base_us={t_base * 1e6:.0f}"),
+        row("train_resume.resumed", t_ck * 1e6,
+            f"acc_delta={delta:+.4f} bitwise_identical={identical} "
+            f"resumed_at={steps // 2} budget={steps}"),
+    ]
+
+
 def run(dense_steps: int = 120, ft_steps: int = 60):
     cfg = _cfg()
     data = SyntheticLM(DataConfig(vocab_size=VOCAB, batch=16, seq_len=48, seed=11))

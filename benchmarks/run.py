@@ -51,6 +51,10 @@ def _modules():
         # through the sparse-conv backward -> compressed inference); its own
         # entry so --quick can run it without the full LM Table-1 sweep
         ("conv_accuracy", types.SimpleNamespace(run=bench_accuracy.run_conv)),
+        # crash-safe training row: checkpoint overhead % + the asserted-zero
+        # accuracy delta of an interrupted-then-resumed finetune
+        ("train_resume",
+         types.SimpleNamespace(run=bench_accuracy.run_train_resume)),
         ("table2_fig11_e2e", bench_e2e),
         ("fig12_layout", bench_layout),
         ("roofline", bench_roofline),

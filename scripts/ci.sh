@@ -38,6 +38,9 @@ python -m repro.obs.validate "$CHAOS_TRACE"
 echo "== sparse finetune smoke (conv VJP backward, interpret mode) =="
 python -c "from repro.models.vision import train_smoke; train_smoke(steps=2)"
 
+echo "== train chaos smoke (kill -> restart -> bitwise-identical resume) =="
+python scripts/train_chaos_smoke.py
+
 echo "== quick benchmarks =="
 python -m benchmarks.run --quick
 

@@ -1,0 +1,140 @@
+"""Train chaos smoke: kill a real finetune subprocess mid-run, restart it,
+and demand the bitwise resume-determinism contract (the CI gate behind
+``make train-chaos-smoke``).
+
+Three subprocess runs of the same ``SparseTrainer`` config (the ``--worker``
+submode below), then the parent audits the checkpoint directories:
+
+  1. baseline   dir A, no faults            -> completes the 6-step budget;
+  2. chaos      dir B, ``REPRO_FAULTS=train.step:iter=3`` -> the process
+                dies at step 3 (nonzero exit), leaving only the async
+                checkpoints it managed to commit;
+  3. restart    dir B, no faults            -> restores the newest VALID
+                checkpoint and completes the original budget.
+
+Asserts: the chaos run really died; the restart resumed (start_step > 0);
+the final-step checkpoints of A and B are **bitwise identical** array for
+array; dir B leaks no ``tmp.*`` write dirs; the ``keep`` retention budget is
+honored; and every surviving checkpoint passes deep (crc) validation.
+
+Usage: PYTHONPATH=src python scripts/train_chaos_smoke.py
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+STEPS = 6
+KILL_AT = 3
+KEEP = 3
+
+
+def worker(ckpt_dir: str) -> int:
+    from repro.train import SparseTrainConfig, SparseTrainer
+
+    cfg = SparseTrainConfig(steps=STEPS, batch=2, lr=0.05, ckpt_dir=ckpt_dir,
+                            ckpt_every=1, keep=KEEP)
+    out = SparseTrainer(cfg).run()
+    print(f"worker: start={out['start_step']} final={out['final_step']} "
+          f"loss={out['loss']:.4f}")
+    return 0
+
+
+def spawn(ckpt_dir: Path, faults: str | None = None) -> subprocess.CompletedProcess:
+    env = dict(os.environ, PYTHONPATH=str(REPO / "src"))
+    env.pop("REPRO_FAULTS", None)
+    if faults:
+        env["REPRO_FAULTS"] = faults
+    return subprocess.run(
+        [sys.executable, __file__, "--worker", "--dir", str(ckpt_dir)],
+        env=env, capture_output=True, text=True, timeout=900)
+
+
+def final_arrays(ckpt_dir: Path):
+    import numpy as np
+
+    d = ckpt_dir / f"step_{STEPS:08d}"
+    with np.load(d / "arrays.npz", allow_pickle=False) as z:
+        return {k: z[k].copy() for k in z.files}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--worker", action="store_true",
+                    help="internal: run one training process")
+    ap.add_argument("--dir", default=None, help="checkpoint directory")
+    ap.add_argument("--workdir", default=None,
+                    help="parent scratch dir (default: mkdtemp)")
+    args = ap.parse_args(argv)
+
+    if args.worker:
+        return worker(args.dir)
+
+    import tempfile
+
+    root = Path(args.workdir or tempfile.mkdtemp(prefix="repro_train_chaos_"))
+    dir_a, dir_b = root / "baseline", root / "chaos"
+    failures: list[str] = []
+
+    def check(cond, msg):
+        (failures.append(msg) if not cond else None)
+
+    # -- 1. baseline ---------------------------------------------------
+    r = spawn(dir_a)
+    check(r.returncode == 0, f"baseline run failed:\n{r.stderr[-2000:]}")
+    print(f"baseline: exit {r.returncode}  {r.stdout.strip()}")
+
+    # -- 2. chaos: the injected fault kills the process at step 3 ------
+    r = spawn(dir_b, faults=f"train.step:iter={KILL_AT}")
+    check(r.returncode != 0, "chaos run should have died, exited 0")
+    check("InjectedFault" in r.stderr,
+          f"chaos run died for the wrong reason:\n{r.stderr[-2000:]}")
+    print(f"chaos:    exit {r.returncode} (killed at step {KILL_AT})")
+
+    # -- 3. restart: resume from the newest valid checkpoint -----------
+    r = spawn(dir_b)
+    check(r.returncode == 0, f"restart run failed:\n{r.stderr[-2000:]}")
+    check("start=0" not in r.stdout, "restart did not resume (start=0)")
+    check(f"final={STEPS}" in r.stdout,
+          f"restart did not reach the budget: {r.stdout.strip()}")
+    print(f"restart:  exit {r.returncode}  {r.stdout.strip()}")
+
+    # -- 4. audit the checkpoint directories ---------------------------
+    if not failures:
+        a, b = final_arrays(dir_a), final_arrays(dir_b)
+        check(sorted(a) == sorted(b), "final checkpoints hold different keys")
+        diverged = [k for k in a
+                    if a[k].dtype != b[k].dtype
+                    or a[k].tobytes() != b[k].tobytes()]
+        check(not diverged,
+              f"{len(diverged)}/{len(a)} arrays diverged from the "
+              f"uninterrupted run, e.g. {diverged[:3]}")
+
+        from repro.train import CheckpointManager
+
+        for d in (dir_a, dir_b):
+            check(not list(d.glob("tmp.*")), f"{d.name}: leaked tmp.* dirs")
+            steps = sorted(d.glob("step_*"))
+            check(len(steps) <= KEEP,
+                  f"{d.name}: {len(steps)} checkpoints kept, budget {KEEP}")
+            mgr = CheckpointManager(d, keep=KEEP)
+            bad = {s.name: mgr.validate(s, deep=True) for s in steps
+                   if mgr.validate(s, deep=True) is not None}
+            check(not bad, f"{d.name}: invalid checkpoints {bad}")
+        n_arrays = len(a)
+    if failures:
+        for msg in failures:
+            print(f"FAIL: {msg}", file=sys.stderr)
+        return 1
+    print(f"TRAIN CHAOS SMOKE OK: killed at step {KILL_AT}, resumed, all "
+          f"{n_arrays} final arrays bitwise identical; no tmp leaks, "
+          f"keep={KEEP} honored, deep validation clean")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

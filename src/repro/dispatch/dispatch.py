@@ -25,6 +25,7 @@ from __future__ import annotations
 
 import contextlib
 import os
+import time
 from typing import Dict, Iterable, Mapping, Optional
 
 from repro.dispatch.profiler import ProfileDB, TuningError, profile_op
@@ -58,7 +59,7 @@ _DB: Optional[ProfileDB] = None
 _MEMO: Dict[tuple, ImplSpec] = {}
 
 # ---------------------------------------------------------------------------
-# Execution-time quarantine
+# Execution-time quarantine (with TTL/backoff re-probe)
 # ---------------------------------------------------------------------------
 #
 # The profiler picks the *fastest* candidate; nothing above this layer knows
@@ -71,32 +72,135 @@ _MEMO: Dict[tuple, ImplSpec] = {}
 # restart retries the full candidate space (the failure may have been
 # environmental).  _Q_GEN joins every memo key, so quarantining an impl
 # invalidates memoized resolutions the same way a registry change does.
-_QUARANTINE: set = set()
+#
+# Entries EXPIRE: each carries a monotonic deadline (base TTL doubled per
+# consecutive failure, capped).  An expired entry moves to *probation* —
+# the impl rejoins the candidate space, so the next resolution may pick it
+# again — and its fate is decided at the next guarded execution:
+#
+#       active ──ttl elapses──► probation ──run_guarded ok──► (entry gone)
+#         ▲                        │
+#         └──── guarded failure ───┘   (fails += 1, ttl doubles)
+#
+# A transiently-failing kernel therefore earns its way back WITHOUT a
+# process restart, while a persistently-failing one re-quarantines on its
+# first re-probe and stays degraded (with exponentially rarer probes).
+# REPRO_DISPATCH_QUARANTINE_TTL_S tunes the base TTL; <= 0 disables expiry
+# (the pre-TTL all-or-nothing behaviour).
+
+
+class _QuarantineEntry:
+    __slots__ = ("fails", "until", "probation", "reason")
+
+    def __init__(self, fails: int, until: float, reason: str):
+        self.fails = fails
+        self.until = until
+        self.probation = False
+        self.reason = reason
+
+
+_QUARANTINE: Dict[tuple, _QuarantineEntry] = {}
 _Q_GEN = 0
+
+_now = time.monotonic  # test seam: monkeypatch dispatch._now for fake clocks
+_TTL_BACKOFF = 2.0
+_TTL_MAX_DOUBLINGS = 6  # cap the backoff at base * 2**6
+
+
+def quarantine_ttl_s() -> float:
+    """Base quarantine TTL in seconds (``REPRO_DISPATCH_QUARANTINE_TTL_S``,
+    default 30).  <= 0 means entries never expire."""
+    try:
+        return float(os.environ.get("REPRO_DISPATCH_QUARANTINE_TTL_S", "30"))
+    except ValueError:
+        return 30.0
+
+
+def _entry_ttl(fails: int) -> float:
+    base = quarantine_ttl_s()
+    if base <= 0:
+        return float("inf")
+    return base * _TTL_BACKOFF ** min(fails - 1, _TTL_MAX_DOUBLINGS)
 
 
 def quarantine(op: str, impl: str, reason: str = "") -> bool:
-    """Denylist ``impl`` for ``op`` in this process.  Returns True when the
-    entry is new.  Emits a ``dispatch.quarantine`` instant + counter so
-    degraded serving is visible in traces."""
+    """Denylist ``impl`` for ``op`` in this process.  Returns True when this
+    starts a new quarantine period (first failure, or a failed re-probe of an
+    expired entry — which doubles the TTL); False when the pair is already
+    actively quarantined.  Emits a ``dispatch.quarantine`` instant + counter
+    so degraded serving is visible in traces."""
     global _Q_GEN
-    if (op, impl) in _QUARANTINE:
+    ent = _QUARANTINE.get((op, impl))
+    if ent is not None and not ent.probation:
         return False
-    _QUARANTINE.add((op, impl))
+    if ent is None:
+        ent = _QuarantineEntry(1, 0.0, reason)
+        _QUARANTINE[(op, impl)] = ent
+    else:
+        # failed re-probe: back off exponentially
+        ent.fails += 1
+        ent.probation = False
+        ent.reason = reason or ent.reason
+    ent.until = _now() + _entry_ttl(ent.fails)
     _Q_GEN += 1
     _C_QUARANTINE.inc()
     _ot.instant("dispatch.quarantine", op=op, impl=impl,
                 reason=reason[:200] if reason else "",
+                fails=ent.fails, ttl_s=_entry_ttl(ent.fails),
                 denylist=len(_QUARANTINE))
     return True
 
 
+def _sweep_expired() -> None:
+    """Move entries whose TTL elapsed to probation (candidate space rejoin).
+    Bumps the memo generation so the change is visible despite memoization.
+    Called on every resolution while any entry exists — cheap (dict walk)."""
+    global _Q_GEN
+    now = _now()
+    for (op, impl), ent in _QUARANTINE.items():
+        if not ent.probation and now >= ent.until:
+            ent.probation = True
+            _Q_GEN += 1
+            _ot.instant("dispatch.quarantine_expired", op=op, impl=impl,
+                        fails=ent.fails)
+
+
+def _is_quarantined(op: str, impl: str) -> bool:
+    """Actively denylisted (probation entries are eligible again)."""
+    ent = _QUARANTINE.get((op, impl))
+    return ent is not None and not ent.probation
+
+
+def _clear_probation(op: str, impl: str) -> None:
+    """A guarded execution of a probation impl succeeded: the impl has
+    recovered; drop the entry entirely (fail count resets)."""
+    global _Q_GEN
+    ent = _QUARANTINE.get((op, impl))
+    if ent is not None and ent.probation:
+        del _QUARANTINE[(op, impl)]
+        _Q_GEN += 1
+        _ot.instant("dispatch.quarantine_recovered", op=op, impl=impl,
+                    fails=ent.fails)
+
+
 def quarantined(op: Optional[str] = None) -> frozenset:
-    """The denylist: ``{(op, impl)}`` pairs, or just the impl names for one
-    ``op``."""
+    """The *active* denylist: ``{(op, impl)}`` pairs, or just the impl names
+    for one ``op``.  Expired (probation) entries are not listed — they are
+    back in the candidate space pending a guarded re-probe."""
     if op is None:
-        return frozenset(_QUARANTINE)
-    return frozenset(i for o, i in _QUARANTINE if o == op)
+        return frozenset(k for k, e in _QUARANTINE.items() if not e.probation)
+    return frozenset(i for (o, i), e in _QUARANTINE.items()
+                     if o == op and not e.probation)
+
+
+def quarantine_info(op: str, impl: str) -> Optional[Dict]:
+    """Introspection: ``{fails, until, probation, reason}`` for a pair, or
+    None when it has no entry (never failed, or recovered)."""
+    ent = _QUARANTINE.get((op, impl))
+    if ent is None:
+        return None
+    return {"fails": ent.fails, "until": ent.until,
+            "probation": ent.probation, "reason": ent.reason}
 
 
 def clear_quarantine() -> None:
@@ -130,7 +234,11 @@ def run_guarded(key: OpKey, spec: ImplSpec, call, *,
     while True:
         try:
             _fault.maybe_fail("dispatch.execute", op=key.op, impl=spec.name)
-            return call(spec)
+            out = call(spec)
+            # a probation (TTL-expired) impl that just executed cleanly has
+            # recovered: drop its entry so it fully rejoins the ladder
+            _clear_probation(key.op, spec.name)
+            return out
         except Exception as e:  # noqa: BLE001 - degrade on any exec failure
             tried.add(spec.name)
             quarantine(key.op, spec.name,
@@ -248,6 +356,11 @@ def best_impl(key: OpKey, *, param_keys: Optional[Iterable[str]] = None,
     Pure lookup — never wall-clocks anything.
     """
     pk = frozenset(param_keys) if param_keys is not None else None
+    if _QUARANTINE:
+        # TTL sweep first: an expired entry must flip to probation (and bump
+        # the generation) BEFORE the memo lookup, or a stale memoized
+        # degradation would outlive its quarantine period
+        _sweep_expired()
     explicit = force is not None
     if force is None and dispatch_enabled():
         # the env override only applies when dispatch is on; an explicit
@@ -301,7 +414,7 @@ def _resolve(key: OpKey, pk, force: Optional[str], explicit: bool,
     _C_CANDS.inc(len(cands))
     by_name = {s.name: s for s in cands}
 
-    if force is not None and not explicit and (key.op, force) in _QUARANTINE:
+    if force is not None and not explicit and _is_quarantined(key.op, force):
         # a process-wide env force naming a quarantined impl yields to the
         # ladder (the quarantine exists because that impl failed to execute);
         # an explicit call-site force= still wins below — the caller asked
@@ -327,12 +440,13 @@ def _resolve(key: OpKey, pk, force: Optional[str], explicit: bool,
         # format: ignore it for this call rather than crash mid-model
 
     if _QUARANTINE:
-        # drop denylisted candidates from every remaining rung (legacy, DB
-        # hit, profiled, heuristic) — unless quarantine has emptied the
-        # candidate set entirely, in which case resolution proceeds on the
-        # full set rather than refusing to run (run_guarded will surface the
+        # drop actively-denylisted candidates from every remaining rung
+        # (legacy, DB hit, profiled, heuristic); probation (TTL-expired)
+        # entries stay eligible — that IS the re-probe.  If quarantine would
+        # empty the candidate set entirely, resolution proceeds on the full
+        # set rather than refusing to run (run_guarded will surface the
         # execution failure if it recurs)
-        alive = [s for s in cands if (key.op, s.name) not in _QUARANTINE]
+        alive = [s for s in cands if not _is_quarantined(key.op, s.name)]
         if alive and len(alive) < len(cands):
             cands = alive
             by_name = {s.name: s for s in cands}

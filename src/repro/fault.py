@@ -44,6 +44,13 @@ Fault sites in the tree today (see ``docs/robustness.md``):
                           candidate's apply (-> quarantine-degradation)
     ``kernel.paged_attn`` paged-attention execution boundary
     ``scheduler.iter``    top of each scheduler iteration (transient hiccup)
+    ``train.step``        top of each trainer step (crash mid-run -> restart
+                          from checkpoint, resume-determinism contract)
+    ``ckpt.write``        checkpoint serialization, before any file is
+                          written (async-save failure propagation)
+    ``ckpt.rename``       after a complete tmp dir is written, before the
+                          atomic rename (preempted writer -> orphaned tmp)
+    ``data.batch``        data-pipeline batch materialization
 
 Note on jit: sites inside traced step functions (``dispatch.execute``,
 ``kernel.paged_attn``) probe at *trace time* — an already-compiled executable
@@ -75,6 +82,11 @@ SITES: Tuple[str, ...] = (
     "dispatch.execute",
     "kernel.paged_attn",
     "scheduler.iter",
+    # training tier (docs/robustness.md "Training tier")
+    "train.step",
+    "ckpt.write",
+    "ckpt.rename",
+    "data.batch",
 )
 
 _C_INJECTED = _om.counter("fault.injected")

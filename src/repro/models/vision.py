@@ -202,6 +202,21 @@ def synth_batch(cfg: VisionConfig, key, batch: int):
     return x.transpose(1, 0, 2, 3).astype(jnp.dtype(cfg.dtype)), labels
 
 
+def batch_for_step(cfg: VisionConfig, seed: int, step: int, batch: int):
+    """Finetune batch for global step k — a pure function of (seed, k).
+
+    This is the vision twin of ``SyntheticLM.batch_at``: the data pipeline's
+    whole checkpointable state is the step counter, so a resumed run replays
+    the exact batch stream and the ``SparseTrainer`` resume-determinism
+    contract (kill-at-k -> restart -> bitwise-identical params) holds.
+    """
+    from repro import fault as _fault
+
+    _fault.maybe_fail("data.batch", step=step)
+    return synth_batch(cfg, jax.random.fold_in(jax.random.PRNGKey(seed), step),
+                       batch)
+
+
 def vision_accuracy(params, cfg: VisionConfig, x_cnhw, labels) -> float:
     logits = vision_apply(params, cfg, x_cnhw)
     return float((jnp.argmax(logits, axis=-1) == labels).mean())

@@ -1,3 +1,4 @@
-from repro.train.checkpoint import CheckpointManager  # noqa: F401
+from repro.train.checkpoint import CheckpointError, CheckpointManager  # noqa: F401
 from repro.train.fault import PreemptionGuard, StepWatchdog, StragglerMonitor  # noqa: F401
+from repro.train.sparse import SparseTrainConfig, SparseTrainer  # noqa: F401
 from repro.train.trainer import TrainConfig, Trainer  # noqa: F401

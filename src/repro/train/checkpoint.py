@@ -1,13 +1,33 @@
-"""Mesh-agnostic, atomic, async checkpointing.
+"""Mesh-agnostic, atomic, async, *integrity-verified* checkpointing.
 
 Checkpoints store *logical* (unsharded) arrays keyed by tree path, plus a
 JSON metadata blob (step, data-pipeline state, config provenance).  A restart
 may therefore use a different device topology (elastic scaling): arrays are
 resharded by the in_shardings of the next jit call.
 
-Write protocol: serialize to ``<dir>/tmp.<step>``, fsync, atomic rename to
-``<dir>/step_<k>`` — a preempted writer can never corrupt the latest
-checkpoint.  Saves run on a daemon thread (async) with a join on exit.
+Write protocol (all inside ``<dir>/tmp.<step>.<pid>``, then one atomic
+rename to ``<dir>/step_<k>``):
+
+    1. ``arrays.npz``     the payload.  numpy degrades non-native dtypes
+                          (bf16) to raw void records; the bytes are exact and
+                          the manifest records the logical dtype for restore.
+    2. ``meta.json``      caller metadata + step + wall time.
+    3. ``manifest.json``  written LAST: per-array crc32 + dtype + shape and
+                          the byte size of ``arrays.npz``.  Its presence is
+                          the commit marker — a directory without a parseable
+                          manifest (torn write, preempted writer, truncated
+                          copy) is *invalid* and restore skips it.
+
+A preempted writer can therefore never corrupt the latest checkpoint, and a
+corrupted directory (bit rot, partial rsync) is detected rather than
+restored: :meth:`CheckpointManager.restore` falls back to the newest *valid*
+step, and :meth:`latest_step` reports only valid directories.
+
+Failure handling: saves may run on a daemon thread (``blocking=False``); an
+exception there (disk full, injected ``ckpt.write``/``ckpt.rename`` fault)
+is captured and re-raised from :meth:`wait` or the next :meth:`save` instead
+of vanishing with the thread.  Orphaned ``tmp.*`` directories from writers
+that died mid-save are GC'd at startup and after every successful save.
 """
 from __future__ import annotations
 
@@ -16,11 +36,30 @@ import os
 import shutil
 import threading
 import time
+import zipfile
+import zlib
 from pathlib import Path
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import numpy as np
+
+from repro import fault as _fault
+from repro.obs import metrics as _om
+from repro.obs import trace as _ot
+
+ARRAYS = "arrays.npz"
+META = "meta.json"
+MANIFEST = "manifest.json"
+MANIFEST_FORMAT = 1
+
+_C_SAVED = _om.counter("ckpt.saved")
+_C_INVALID = _om.counter("ckpt.invalid_skipped")
+_C_TMP_GC = _om.counter("ckpt.tmp_gc")
+
+
+class CheckpointError(RuntimeError):
+    """A checkpoint directory failed integrity validation."""
 
 
 def _flatten(tree) -> Dict[str, np.ndarray]:
@@ -32,7 +71,11 @@ def _flatten(tree) -> Dict[str, np.ndarray]:
     return out
 
 
-def _unflatten_like(proto, arrays: Dict[str, np.ndarray]):
+def _unflatten_like(proto, arrays: Dict[str, np.ndarray], *, cast: bool = False):
+    """Rebuild ``proto``'s structure from ``arrays``, validating shape AND
+    dtype per leaf.  A checkpoint whose dtype differs from the proto (bf16
+    checkpoint into an f32 model or vice versa) raises unless ``cast=True``
+    explicitly opts into the conversion."""
     flat, treedef = jax.tree_util.tree_flatten_with_path(proto)
     leaves = []
     for path, leaf in flat:
@@ -43,8 +86,24 @@ def _unflatten_like(proto, arrays: Dict[str, np.ndarray]):
         want = tuple(getattr(leaf, "shape", arr.shape))
         if tuple(arr.shape) != want:
             raise ValueError(f"shape mismatch for {key}: ckpt {arr.shape} vs model {want}")
+        want_dt = getattr(leaf, "dtype", None)
+        if want_dt is not None and arr.dtype != np.dtype(want_dt):
+            if not cast:
+                raise ValueError(
+                    f"dtype mismatch for {key}: ckpt {arr.dtype} vs model "
+                    f"{np.dtype(want_dt)} (pass cast=True to opt into the "
+                    f"conversion)")
+            arr = arr.astype(want_dt)
         leaves.append(arr)
     return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def _array_entry(v: np.ndarray) -> Dict[str, Any]:
+    return {
+        "dtype": str(v.dtype),
+        "shape": list(v.shape),
+        "crc32": zlib.crc32(np.ascontiguousarray(v).tobytes()),
+    }
 
 
 class CheckpointManager:
@@ -53,11 +112,19 @@ class CheckpointManager:
         self.dir.mkdir(parents=True, exist_ok=True)
         self.keep = keep
         self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+        # any tmp.* at startup is an orphan from a writer that died mid-save
+        self._gc_tmp()
 
     # -- save -----------------------------------------------------------
     def save(self, step: int, trees: Dict[str, Any], metadata: Optional[Dict] = None,
              blocking: bool = True):
-        """trees: name -> pytree (e.g. {'params': ..., 'opt': ...})."""
+        """trees: name -> pytree (e.g. {'params': ..., 'opt': ...}).
+
+        Serializes against any in-flight async save first, which also
+        re-raises a previous async failure — a dying writer is never silent.
+        """
+        self.wait()
         payload = {}
         for name, tree in trees.items():
             for k, v in _flatten(tree).items():
@@ -65,55 +132,188 @@ class CheckpointManager:
         meta = dict(metadata or {}, step=step, time=time.time())
 
         def write():
+            _fault.maybe_fail("ckpt.write", step=step)
             tmp = self.dir / f"tmp.{step}.{os.getpid()}"
             tmp.mkdir(parents=True, exist_ok=True)
-            np.savez(tmp / "arrays.npz", **payload)
-            (tmp / "meta.json").write_text(json.dumps(meta))
+            np.savez(tmp / ARRAYS, **payload)
+            (tmp / META).write_text(json.dumps(meta))
+            # manifest last: its presence commits the directory as complete
+            manifest = {
+                "format": MANIFEST_FORMAT,
+                "step": step,
+                "arrays_bytes": (tmp / ARRAYS).stat().st_size,
+                "arrays": {k: _array_entry(v) for k, v in payload.items()},
+            }
+            (tmp / MANIFEST).write_text(json.dumps(manifest))
+            _fault.maybe_fail("ckpt.rename", step=step)
             final = self.dir / f"step_{step:08d}"
             if final.exists():
                 shutil.rmtree(final)
             os.replace(tmp, final)  # atomic on POSIX
+            _C_SAVED.inc()
+            _ot.instant("ckpt.save", step=step, arrays=len(payload),
+                        bytes=manifest["arrays_bytes"])
             self._gc()
 
         if blocking:
             write()
         else:
-            self.wait()
-            self._thread = threading.Thread(target=write, daemon=True)
+            def guarded():
+                try:
+                    write()
+                except BaseException as e:  # noqa: BLE001 - surfaced on wait
+                    self._error = e
+
+            self._thread = threading.Thread(target=guarded, daemon=True)
             self._thread.start()
 
     def wait(self):
+        """Join any in-flight async save; re-raise its failure if it died."""
         if self._thread is not None:
             self._thread.join()
             self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    def _gc_tmp(self):
+        """Remove orphaned ``tmp.*`` write directories.  Safe whenever no
+        writer is in flight (saves serialize through :meth:`wait`)."""
+        for t in self.dir.glob("tmp.*"):
+            shutil.rmtree(t, ignore_errors=True)
+            _C_TMP_GC.inc()
 
     def _gc(self):
-        ckpts = sorted(self.dir.glob("step_*"))
-        for old in ckpts[: -self.keep]:
+        self._gc_tmp()
+        # keep the newest `keep` VALID checkpoints: invalid (torn/corrupt)
+        # directories neither count against the budget nor shield a valid
+        # one from staying restorable
+        valid = [d for d in sorted(self.dir.glob("step_*")) if self.validate(d) is None]
+        for old in valid[: -self.keep]:
             shutil.rmtree(old, ignore_errors=True)
 
-    # -- restore ----------------------------------------------------------
-    def latest_step(self) -> Optional[int]:
-        ckpts = sorted(self.dir.glob("step_*"))
-        if not ckpts:
-            return None
-        return int(ckpts[-1].name.split("_")[1])
+    # -- validation -------------------------------------------------------
+    def validate(self, d: Path, deep: bool = False) -> Optional[str]:
+        """Why ``d`` is not a restorable checkpoint, or None if it is.
 
-    def restore(self, step: Optional[int], protos: Dict[str, Any]) -> Tuple[Dict[str, Any], Dict]:
+        Shallow (default): manifest parses, files exist, ``arrays.npz`` has
+        the committed byte size — catches torn writes and truncation without
+        reading array data.  ``deep=True`` additionally re-reads every array
+        and checks crc32/dtype/shape against the manifest (the restore path).
+        """
+        try:
+            manifest = json.loads((d / MANIFEST).read_text())
+        except (OSError, ValueError):
+            return "missing or unparseable manifest.json"
+        if not isinstance(manifest.get("arrays"), dict):
+            return "manifest has no arrays table"
+        if not (d / META).is_file():
+            return "missing meta.json"
+        try:
+            size = (d / ARRAYS).stat().st_size
+        except OSError:
+            return "missing arrays.npz"
+        if size != manifest.get("arrays_bytes"):
+            return (f"arrays.npz is {size} bytes, manifest committed "
+                    f"{manifest.get('arrays_bytes')}")
+        if not deep:
+            return None
+        try:
+            self._load_arrays(d, manifest)
+        except (CheckpointError, OSError, ValueError) as e:
+            return str(e)
+        return None
+
+    def _load_arrays(self, d: Path, manifest: Dict) -> Dict[str, np.ndarray]:
+        """Load + integrity-check every array against the manifest."""
+        try:
+            with np.load(d / ARRAYS, allow_pickle=False) as z:
+                arrays = {k: z[k] for k in z.files}
+        except (OSError, ValueError, zlib.error, zipfile.BadZipFile) as e:
+            raise CheckpointError(f"unreadable arrays.npz in {d.name}: {e}")
+        for key, ent in manifest["arrays"].items():
+            if key not in arrays:
+                raise CheckpointError(f"{d.name}: array {key!r} missing")
+            v = arrays[key]
+            want_dt = np.dtype(ent["dtype"])
+            if v.dtype != want_dt:
+                # npz round-trips non-native dtypes (bf16) as raw void
+                # records of the same width; view restores the logical dtype
+                if v.dtype.kind == "V" and v.dtype.itemsize == want_dt.itemsize:
+                    v = v.view(want_dt)
+                else:
+                    raise CheckpointError(
+                        f"{d.name}: {key!r} stored as {v.dtype}, manifest "
+                        f"says {want_dt}")
+            if tuple(v.shape) != tuple(ent["shape"]):
+                raise CheckpointError(
+                    f"{d.name}: {key!r} shape {v.shape} vs manifest "
+                    f"{tuple(ent['shape'])}")
+            if zlib.crc32(np.ascontiguousarray(v).tobytes()) != ent["crc32"]:
+                raise CheckpointError(f"{d.name}: {key!r} checksum mismatch")
+            arrays[key] = v
+        return arrays
+
+    # -- restore ----------------------------------------------------------
+    def _step_dirs(self) -> List[Path]:
+        return sorted(self.dir.glob("step_*"), reverse=True)
+
+    def valid_steps(self) -> List[int]:
+        """Steps of every (shallow-)valid checkpoint, newest first."""
+        return [int(d.name.split("_")[1]) for d in self._step_dirs()
+                if self.validate(d) is None]
+
+    def latest_step(self) -> Optional[int]:
+        """Newest *valid* step (torn/corrupt directories are skipped)."""
+        steps = self.valid_steps()
+        return steps[0] if steps else None
+
+    def restore(self, step: Optional[int], protos: Dict[str, Any], *,
+                cast: bool = False) -> Tuple[Dict[str, Any], Dict]:
         """protos: name -> pytree of arrays or ShapeDtypeStructs (structure +
-        shape source). Returns (trees, metadata)."""
-        if step is None:
-            step = self.latest_step()
-        if step is None:
-            raise FileNotFoundError(f"no checkpoints in {self.dir}")
-        d = self.dir / f"step_{step:08d}"
-        with np.load(d / "arrays.npz", allow_pickle=False) as z:
-            arrays = {k: z[k] for k in z.files}
-        meta = json.loads((d / "meta.json").read_text())
+        shape/dtype source). Returns (trees, metadata).
+
+        ``step=None`` restores the newest checkpoint that passes deep
+        integrity validation, skipping (and reporting via obs) any torn or
+        corrupted newer directory; an explicit ``step`` that fails validation
+        raises :class:`CheckpointError`.  ``cast=True`` opts into dtype
+        conversion when the checkpoint and proto dtypes differ.
+        """
+        if step is not None:
+            d = self.dir / f"step_{step:08d}"
+            if not d.is_dir():
+                raise FileNotFoundError(f"no checkpoint for step {step} in {self.dir}")
+            reason = self.validate(d)
+            if reason is not None:
+                raise CheckpointError(f"checkpoint {d.name} invalid: {reason}")
+            manifest = json.loads((d / MANIFEST).read_text())
+            arrays = self._load_arrays(d, manifest)
+            return self._build(d, arrays, protos, cast)
+        tried = []
+        for d in self._step_dirs():
+            reason = self.validate(d)
+            if reason is None:
+                try:
+                    manifest = json.loads((d / MANIFEST).read_text())
+                    arrays = self._load_arrays(d, manifest)
+                    return self._build(d, arrays, protos, cast)
+                except CheckpointError as e:
+                    reason = str(e)
+            tried.append(f"{d.name}: {reason}")
+            _C_INVALID.inc()
+            _ot.instant("ckpt.invalid", dir=d.name, reason=reason[:200])
+        if tried:
+            raise CheckpointError(
+                f"no valid checkpoint in {self.dir}; skipped: {tried}")
+        raise FileNotFoundError(f"no checkpoints in {self.dir}")
+
+    def _build(self, d: Path, arrays: Dict[str, np.ndarray],
+               protos: Dict[str, Any], cast: bool) -> Tuple[Dict[str, Any], Dict]:
+        meta = json.loads((d / META).read_text())
         out = {}
         for name, proto in protos.items():
             sub = {
                 k.split("|", 1)[1]: v for k, v in arrays.items() if k.startswith(name + "|")
             }
-            out[name] = _unflatten_like(proto, sub)
+            out[name] = _unflatten_like(proto, sub, cast=cast)
         return out, meta

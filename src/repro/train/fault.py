@@ -45,15 +45,34 @@ class PreemptionGuard:
 
 
 class StepWatchdog:
-    """Aborts the process if no heartbeat arrives within timeout_s."""
+    """Aborts the process if no heartbeat arrives within timeout_s.
+
+    The default abort is not a bare ``os._exit``: it first emits a
+    ``fault.watchdog`` obs instant and, when a trace sink is armed
+    (``REPRO_OBS_TRACE``), dumps the trace ring — ``os._exit`` skips atexit
+    handlers, so without the explicit dump a hung run's trace (the one
+    artifact that says *where* it hung) would be lost.
+    """
 
     def __init__(self, timeout_s: float = 1800.0, abort: Optional[Callable] = None):
         self.timeout_s = timeout_s
         self._last = time.monotonic()
         self._stop = threading.Event()
-        self._abort = abort or (lambda: os._exit(42))
+        self._abort = abort or self._default_abort
         self._thread: Optional[threading.Thread] = None
         self.fired = False
+
+    def _default_abort(self):
+        from repro.obs import trace as _ot
+
+        _ot.instant("fault.watchdog", timeout_s=self.timeout_s)
+        path = os.environ.get("REPRO_OBS_TRACE")
+        if path:
+            try:
+                _ot.dump_chrome_trace(path)
+            except OSError:
+                pass  # aborting anyway; never mask the exit
+        os._exit(42)
 
     def start(self):
         self._thread = threading.Thread(target=self._run, daemon=True)

@@ -1,0 +1,190 @@
+"""SparseTrainer: crash-safe driver for the paper's masked/compressed
+finetune loop (§4 protocol, reproduced in the conv accuracy cell).
+
+The LM :class:`repro.train.Trainer` drives the AdamW language-model path;
+this is its sparse-vision twin — the loop that matters for every pruned
+deployment, because the paper's accuracy story (dense 0.953 -> one-shot
+0.750 -> finetuned 0.953) puts a finetune run between pruning and serving
+for every sparsity/bit-width config.  Those runs die to preemption at fleet
+scale, so the whole loop is built around one contract:
+
+    **Resume determinism.**  Kill the process at any step k, restart it with
+    the same config, and the final params are *bitwise identical* to the
+    uninterrupted run — the training twin of the serve scheduler's
+    preempt-restore token-identity guarantee.
+
+Everything the contract needs is checkpointed or derivable:
+
+  * params AND momentum round-trip exactly through the integrity-verified
+    :class:`~repro.train.checkpoint.CheckpointManager` (crc-manifested npz;
+    int ``idx`` / ``conv_geom`` discriminator leaves and bool masks keep
+    their dtypes; bf16 survives the void-dtype npz round trip);
+  * data is a pure function of (seed, step) — ``vision.batch_for_step`` —
+    so the pipeline "state" in the checkpoint metadata is just the step
+    counter plus the seed it must match;
+  * the step function is a fixed jit program (``vision.train_step`` + mask
+    projection), so replaying steps k..N from a restored state is the same
+    computation the uninterrupted run performed.
+
+Fault sites: ``train.step`` probes at the top of every step (chaos harness:
+``scripts/train_chaos_smoke.py`` kills and restarts a real subprocess),
+``data.batch`` inside the batch fetch, ``ckpt.write``/``ckpt.rename`` inside
+the checkpoint writer.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import VisionConfig
+from repro.obs import metrics as _om
+from repro.obs import trace as _ot
+from repro.train.checkpoint import CheckpointManager
+from repro.train.fault import PreemptionGuard, StepWatchdog, StragglerMonitor
+
+_C_STEPS = _om.counter("train.steps")
+_G_LOSS = _om.gauge("train.loss")
+
+
+@dataclasses.dataclass
+class SparseTrainConfig:
+    steps: int = 8              # TOTAL budget, restored progress included
+    batch: int = 4
+    lr: float = 0.05
+    momentum: float = 0.9
+    data_seed: int = 0          # batch_for_step stream; pinned in metadata
+    init_seed: int = 0
+    arch: str = "resnet-tiny"
+    ckpt_dir: Optional[str] = None
+    ckpt_every: int = 0         # 0 = only the final checkpoint
+    keep: int = 3
+    log_every: int = 1
+    watchdog_timeout_s: float = 3600.0
+
+
+class SparseTrainer:
+    """Drives ``vision.train_step`` (SGD/momentum + per-step mask
+    projection) over any layer format ``vision_init``/``prune_conv_tree``
+    produce — masked and compressed convs both backpropagate through the
+    ``conv2d_sparse`` custom VJP."""
+
+    def __init__(self, train_cfg: SparseTrainConfig = SparseTrainConfig(), *,
+                 cfg: Optional[VisionConfig] = None, params=None):
+        from repro.configs import get_vision_config
+        from repro.core.sparse_linear import unbox_tree
+        from repro.models import vision
+
+        self.train_cfg = train_cfg
+        self.cfg = cfg if cfg is not None else get_vision_config(train_cfg.arch)
+        if params is None:
+            params, _ = unbox_tree(
+                vision.vision_init(self.cfg, jax.random.PRNGKey(train_cfg.init_seed)))
+        self.params = params
+        self.mom = vision.sgd_init(params)
+        self.step_fn = jax.jit(
+            lambda p, m, x, y: vision.train_step(
+                p, m, self.cfg, x, y, lr=train_cfg.lr,
+                momentum=train_cfg.momentum))
+        self.start_step = 0
+        self.ckpt = (CheckpointManager(train_cfg.ckpt_dir, keep=train_cfg.keep)
+                     if train_cfg.ckpt_dir else None)
+        self.history: list = []
+        self.straggler = StragglerMonitor()
+        self.preempt = PreemptionGuard()
+        self.watchdog: Optional[StepWatchdog] = None
+
+    # ------------------------------------------------------------------
+    def batch_at(self, step: int):
+        from repro.models import vision
+
+        return vision.batch_for_step(self.cfg, self.train_cfg.data_seed, step,
+                                     self.train_cfg.batch)
+
+    def maybe_restore(self) -> int:
+        """Restore the newest *valid* checkpoint (torn/corrupt ones are
+        skipped by the manager).  Raises if the checkpointed data seed does
+        not match this trainer's — resuming onto a different batch stream
+        would silently break the determinism contract."""
+        if self.ckpt is None or self.ckpt.latest_step() is None:
+            return 0
+        trees, meta = self.ckpt.restore(
+            None, {"params": self.params, "mom": self.mom})
+        data = meta.get("data", {})
+        if "seed" in data and int(data["seed"]) != self.train_cfg.data_seed:
+            raise ValueError(
+                f"checkpoint was trained on data seed {data['seed']}, this "
+                f"trainer is configured with {self.train_cfg.data_seed}")
+        self.params = jax.tree_util.tree_map(jnp.asarray, trees["params"])
+        self.mom = jax.tree_util.tree_map(jnp.asarray, trees["mom"])
+        self.start_step = int(meta["step"])
+        return self.start_step
+
+    def save(self, step: int, blocking: bool = True):
+        if self.ckpt is None:
+            return
+        self.ckpt.save(
+            step,
+            {"params": self.params, "mom": self.mom},
+            metadata={"step": step,
+                      "data": {"seed": self.train_cfg.data_seed, "step": step},
+                      "arch": self.cfg.name},
+            blocking=blocking,
+        )
+
+    # ------------------------------------------------------------------
+    def run(self, steps: Optional[int] = None) -> Dict[str, Any]:
+        """Train to a TOTAL budget of ``steps`` (default: config), restoring
+        any checkpointed progress first — same budget semantics as
+        :meth:`Trainer.run`."""
+        from repro import fault as _fault
+
+        tc = self.train_cfg
+        end = steps or tc.steps
+        self.preempt.install()
+        self.watchdog = StepWatchdog(tc.watchdog_timeout_s).start()
+        step = self.maybe_restore()
+        preempted = False
+        loss = float("nan")
+        try:
+            while step < end:
+                t0 = time.perf_counter()
+                _fault.maybe_fail("train.step", step=step)
+                with _ot.span("train.step", step=step):
+                    x, y = self.batch_at(step)
+                    self.params, self.mom, loss = self.step_fn(
+                        self.params, self.mom, x, y)
+                _C_STEPS.inc()
+                dur = time.perf_counter() - t0
+                if (step % tc.log_every == 0) or step == end - 1:
+                    loss = float(loss)
+                    _G_LOSS.set(loss)
+                    self.history.append(
+                        {"step": step, "loss": loss, "sec_per_step": dur})
+                self.watchdog.beat()
+                self.straggler.record(step, dur)
+                step += 1
+                if self.ckpt and tc.ckpt_every and step % tc.ckpt_every == 0:
+                    self.save(step, blocking=False)
+                if self.preempt.requested:
+                    preempted = True
+                    break
+            # final (preemption-safe) checkpoint; save() waits on any async
+            # writer first, so a failed background save surfaces here.  A
+            # crash mid-loop propagates WITHOUT this save — exactly a kill.
+            if self.ckpt:
+                self.save(step, blocking=True)
+        finally:
+            self.watchdog.stop()
+            self.preempt.uninstall()
+        return {
+            "final_step": step,
+            "start_step": self.start_step,
+            "preempted": preempted,
+            "watchdog_fired": self.watchdog.fired,
+            "history": self.history,
+            "loss": float(loss) if loss == loss else loss,
+        }

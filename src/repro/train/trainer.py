@@ -86,40 +86,56 @@ class Trainer:
 
     # ------------------------------------------------------------------
     def run(self, steps: Optional[int] = None) -> Dict[str, Any]:
+        """Train to a TOTAL budget of ``steps``.
+
+        ``steps`` counts from step 0 including restored progress: a run
+        killed at step k and restarted with the same budget completes the
+        original schedule (trains ``steps - k`` more), it does not train
+        ``steps`` *additional* steps.  A restore at or past the budget
+        trains nothing and returns immediately after the final checkpoint.
+        """
+        from repro import fault as _fault
+
         steps = steps or self.train_cfg.steps
         self.preempt.install()
         self.watchdog = StepWatchdog(self.train_cfg.watchdog_timeout_s).start()
         step = self.maybe_restore()
-        end = step + steps if self.start_step else steps
+        end = steps
         preempted = False
-        while step < end:
-            t0 = time.perf_counter()
-            batch = {k: jax.numpy.asarray(v) for k, v in self.data.batch_at(step).items()}
-            self.params, self.opt_state, metrics = self.step_fn(
-                self.params, self.opt_state, batch
-            )
-            if (step % self.train_cfg.log_every == 0) or step == end - 1:
-                m = {k: float(v) for k, v in metrics.items()}
-                dur = time.perf_counter() - t0
-                m.update(step=step, sec_per_step=dur)
-                self.history.append(m)
-            self.watchdog.beat()
-            self.straggler.record(step, time.perf_counter() - t0)
-            step += 1
-            if self.ckpt and step % self.train_cfg.ckpt_every == 0:
-                self.save(step, blocking=False)
-            if self.preempt.requested:
-                preempted = True
-                break
-        # final (preemption-safe) checkpoint
-        if self.ckpt:
-            self.ckpt.wait()
-            self.save(step, blocking=True)
-        self.watchdog.stop()
-        self.preempt.uninstall()
+        try:
+            while step < end:
+                t0 = time.perf_counter()
+                _fault.maybe_fail("train.step", step=step)
+                batch = {k: jax.numpy.asarray(v) for k, v in self.data.batch_at(step).items()}
+                self.params, self.opt_state, metrics = self.step_fn(
+                    self.params, self.opt_state, batch
+                )
+                if (step % self.train_cfg.log_every == 0) or step == end - 1:
+                    m = {k: float(v) for k, v in metrics.items()}
+                    dur = time.perf_counter() - t0
+                    m.update(step=step, sec_per_step=dur)
+                    self.history.append(m)
+                self.watchdog.beat()
+                self.straggler.record(step, time.perf_counter() - t0)
+                step += 1
+                if self.ckpt and step % self.train_cfg.ckpt_every == 0:
+                    self.save(step, blocking=False)
+                if self.preempt.requested:
+                    preempted = True
+                    break
+            # final (preemption-safe) checkpoint; save() drains the async
+            # writer first, so a failed background save surfaces here.  A
+            # crash mid-loop propagates WITHOUT this save — exactly a kill.
+            if self.ckpt:
+                self.save(step, blocking=True)
+        finally:
+            self.watchdog.stop()
+            self.preempt.uninstall()
         return {
             "final_step": step,
+            "start_step": self.start_step,
             "preempted": preempted,
+            "watchdog_fired": self.watchdog.fired,
             "history": self.history,
             "stragglers": self.straggler.events,
         }

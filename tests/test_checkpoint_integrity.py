@@ -1,0 +1,234 @@
+"""Integrity-verified checkpointing: the manifest commit marker, crc
+verification, corruption fallback, async-failure propagation, tmp GC, and
+dtype discipline of ``repro.train.checkpoint``."""
+import json
+import zlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import fault
+from repro.train.checkpoint import (
+    ARRAYS,
+    MANIFEST,
+    META,
+    CheckpointError,
+    CheckpointManager,
+)
+
+
+def _tree():
+    """Mixed-dtype pytree covering the formats a pruned model checkpoints:
+    f32 weights, bf16 activations-scale, int32 packed indices, bool masks."""
+    return {
+        "w": jnp.arange(12, dtype=jnp.float32).reshape(3, 4) / 7.0,
+        "scale": jnp.full((4, 2), 0.375, dtype=jnp.bfloat16),
+        "idx": jnp.arange(8, dtype=jnp.int32).reshape(2, 4),
+        "mask": jnp.array([True, False, True, True]),
+    }
+
+
+def _leaves_bitwise_equal(a, b):
+    la = jax.tree_util.tree_leaves(a)
+    lb = jax.tree_util.tree_leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        x, y = np.asarray(x), np.asarray(y)
+        assert x.dtype == y.dtype
+        assert x.shape == y.shape
+        assert x.tobytes() == y.tobytes()
+
+
+def _truncate(d, frac=0.5):
+    f = d / ARRAYS
+    data = f.read_bytes()
+    f.write_bytes(data[: int(len(data) * frac)])
+
+
+class TestManifest:
+    def test_manifest_is_complete_commit_record(self, tmp_path):
+        mgr = CheckpointManager(tmp_path)
+        mgr.save(3, {"params": _tree()})
+        d = mgr.dir / "step_00000003"
+        man = json.loads((d / MANIFEST).read_text())
+        assert man["step"] == 3
+        assert man["arrays_bytes"] == (d / ARRAYS).stat().st_size
+        assert set(man["arrays"]) == {
+            "params|['w']", "params|['scale']", "params|['idx']",
+            "params|['mask']"}
+        ent = man["arrays"]["params|['idx']"]
+        assert ent["dtype"] == "int32" and ent["shape"] == [2, 4]
+        want = zlib.crc32(np.arange(8, dtype=np.int32).tobytes())
+        assert ent["crc32"] == want
+
+    def test_mixed_dtype_bitwise_roundtrip(self, tmp_path):
+        """bf16 survives the npz void-record round trip, ints and bools keep
+        their dtypes — every leaf restores bitwise identical."""
+        mgr = CheckpointManager(tmp_path)
+        tree = _tree()
+        mgr.save(1, {"params": tree}, metadata={"step": 1})
+        out, meta = mgr.restore(None, {"params": tree})
+        assert meta["step"] == 1
+        _leaves_bitwise_equal(tree, out["params"])
+
+    def test_pruned_vision_tree_roundtrip(self, tmp_path):
+        """A real pruned-model tree (masked convs with bool masks, dense stem,
+        head) round-trips bitwise through save/restore."""
+        from repro.configs import get_vision_config
+        from repro.core.sparse_linear import unbox_tree
+        from repro.models import vision
+
+        cfg = get_vision_config("resnet-tiny")
+        params, _ = unbox_tree(vision.vision_init(cfg, jax.random.PRNGKey(0)))
+        mgr = CheckpointManager(tmp_path)
+        mgr.save(1, {"params": params})
+        out, _ = mgr.restore(1, {"params": params})
+        _leaves_bitwise_equal(params, out["params"])
+
+    def test_dtype_mismatch_requires_explicit_cast(self, tmp_path):
+        mgr = CheckpointManager(tmp_path)
+        mgr.save(1, {"params": {"a": jnp.ones((2, 2), dtype=jnp.float32)}})
+        proto = {"a": jnp.zeros((2, 2), dtype=jnp.bfloat16)}
+        with pytest.raises(ValueError, match="dtype mismatch"):
+            mgr.restore(None, {"params": proto})
+        out, _ = mgr.restore(None, {"params": proto}, cast=True)
+        assert np.asarray(out["params"]["a"]).dtype == np.dtype("bfloat16")
+
+
+class TestCorruptionFallback:
+    def test_truncated_newest_falls_back_to_valid(self, tmp_path):
+        mgr = CheckpointManager(tmp_path)
+        t1, t2 = _tree(), jax.tree_util.tree_map(lambda v: v + 1, _tree())
+        mgr.save(1, {"params": t1}, metadata={"tag": "one"})
+        mgr.save(2, {"params": t2}, metadata={"tag": "two"})
+        _truncate(mgr.dir / "step_00000002")
+        assert mgr.latest_step() == 1
+        out, meta = mgr.restore(None, {"params": t1})
+        assert meta["tag"] == "one"
+        _leaves_bitwise_equal(t1, out["params"])
+        # an EXPLICIT request for the torn step is an error, not a fallback
+        with pytest.raises(CheckpointError, match="bytes"):
+            mgr.restore(2, {"params": t2})
+
+    @pytest.mark.parametrize("frac", [0.0, 0.25, 0.6, 0.95])
+    def test_truncation_fuzz_always_detected(self, tmp_path, frac):
+        mgr = CheckpointManager(tmp_path)
+        mgr.save(1, {"params": _tree()})
+        d = mgr.dir / "step_00000001"
+        _truncate(d, frac=frac)
+        assert mgr.validate(d) is not None
+        assert mgr.latest_step() is None
+
+    def test_missing_meta_invalidates(self, tmp_path):
+        mgr = CheckpointManager(tmp_path)
+        mgr.save(1, {"params": _tree()})
+        d = mgr.dir / "step_00000001"
+        (d / META).unlink()
+        assert mgr.validate(d) == "missing meta.json"
+        assert mgr.latest_step() is None
+
+    def test_missing_manifest_is_uncommitted(self, tmp_path):
+        """No manifest == the writer died before the commit marker: the
+        directory is invisible to latest_step/restore."""
+        mgr = CheckpointManager(tmp_path)
+        mgr.save(1, {"params": _tree()})
+        (mgr.dir / "step_00000001" / MANIFEST).unlink()
+        assert mgr.latest_step() is None
+        with pytest.raises(CheckpointError, match="no valid checkpoint"):
+            mgr.restore(None, {"params": _tree()})
+
+    def test_bit_rot_caught_by_deep_check(self, tmp_path):
+        """Same-size corruption passes the shallow size check but fails the
+        deep (crc) one; restore(None) skips to the older valid step."""
+        mgr = CheckpointManager(tmp_path)
+        t1 = _tree()
+        mgr.save(1, {"params": t1}, metadata={"tag": "good"})
+        mgr.save(2, {"params": t1}, metadata={"tag": "rot"})
+        f = mgr.dir / "step_00000002" / ARRAYS
+        data = bytearray(f.read_bytes())
+        mid = len(data) // 2
+        data[mid] ^= 0xFF
+        data[mid + 1] ^= 0xFF
+        f.write_bytes(bytes(data))
+        d = mgr.dir / "step_00000002"
+        assert mgr.validate(d) is None          # shallow: size still matches
+        assert mgr.validate(d, deep=True) is not None
+        out, meta = mgr.restore(None, {"params": t1})
+        assert meta["tag"] == "good"
+        _leaves_bitwise_equal(t1, out["params"])
+
+    def test_all_invalid_raises_with_reasons(self, tmp_path):
+        mgr = CheckpointManager(tmp_path)
+        mgr.save(1, {"params": _tree()})
+        _truncate(mgr.dir / "step_00000001", frac=0.3)
+        with pytest.raises(CheckpointError, match="skipped"):
+            mgr.restore(None, {"params": _tree()})
+
+    def test_empty_dir_raises_file_not_found(self, tmp_path):
+        mgr = CheckpointManager(tmp_path)
+        with pytest.raises(FileNotFoundError):
+            mgr.restore(None, {"params": _tree()})
+        with pytest.raises(FileNotFoundError):
+            mgr.restore(7, {"params": _tree()})
+
+
+class TestGC:
+    def test_orphan_tmp_gc_at_init(self, tmp_path):
+        orphan = tmp_path / "tmp.5.12345"
+        orphan.mkdir(parents=True)
+        (orphan / ARRAYS).write_bytes(b"partial write")
+        CheckpointManager(tmp_path)
+        assert not orphan.exists()
+
+    def test_keep_gc_counts_only_valid(self, tmp_path):
+        """An invalid directory neither counts against `keep` nor shields a
+        valid one: corrupt step 4, save step 5 with keep=2 — steps 3 and 5
+        survive as the two newest VALID checkpoints."""
+        mgr = CheckpointManager(tmp_path, keep=2)
+        for s in (1, 2, 3, 4):
+            mgr.save(s, {"params": _tree()})
+        _truncate(mgr.dir / "step_00000004")
+        mgr.save(5, {"params": _tree()})
+        names = sorted(p.name for p in mgr.dir.glob("step_*"))
+        assert names == ["step_00000003", "step_00000004", "step_00000005"]
+        assert mgr.valid_steps() == [5, 3]
+        assert mgr.latest_step() == 5
+
+
+class TestAsyncFailure:
+    def test_write_fault_surfaces_on_wait(self, tmp_path):
+        mgr = CheckpointManager(tmp_path)
+        with fault.fault_scope("ckpt.write:n=1"):
+            mgr.save(1, {"params": _tree()}, blocking=False)
+            with pytest.raises(fault.InjectedFault):
+                mgr.wait()
+        assert mgr.latest_step() is None
+        # the failure was consumed: the manager is reusable
+        mgr.save(2, {"params": _tree()})
+        assert mgr.latest_step() == 2
+
+    def test_write_fault_surfaces_on_next_save(self, tmp_path):
+        mgr = CheckpointManager(tmp_path)
+        with fault.fault_scope("ckpt.write:n=1"):
+            mgr.save(1, {"params": _tree()}, blocking=False)
+            mgr._thread.join()
+        with pytest.raises(fault.InjectedFault):
+            mgr.save(2, {"params": _tree()})
+        mgr.save(2, {"params": _tree()})
+        assert mgr.latest_step() == 2
+
+    def test_rename_fault_never_commits(self, tmp_path):
+        """A writer killed between the manifest write and the atomic rename
+        leaves only a tmp.* orphan — no step dir, and the orphan is GC'd by
+        the next manager (a restarted trainer)."""
+        mgr = CheckpointManager(tmp_path)
+        with fault.fault_scope("ckpt.rename:n=1"):
+            with pytest.raises(fault.InjectedFault):
+                mgr.save(1, {"params": _tree()})
+        assert list(mgr.dir.glob("step_*")) == []
+        assert list(mgr.dir.glob("tmp.*")) != []
+        mgr2 = CheckpointManager(tmp_path)
+        assert list(mgr2.dir.glob("tmp.*")) == []
+        assert mgr2.latest_step() is None

@@ -186,6 +186,94 @@ class TestRunGuarded:
         np.testing.assert_allclose(y, y_ref, rtol=1e-4, atol=1e-4)
 
 
+class TestQuarantineTTL:
+    """Quarantine entries expire: after the TTL the impl rejoins the
+    candidate space on *probation* — a clean guarded run deletes the entry,
+    a failed re-probe re-quarantines with exponentially longer TTL."""
+
+    @pytest.fixture
+    def clock(self, monkeypatch):
+        from repro.dispatch import dispatch as dmod
+        t = [100.0]
+        monkeypatch.setattr(dmod, "_now", lambda: t[0])
+        monkeypatch.setenv("REPRO_DISPATCH_QUARANTINE_TTL_S", "10")
+        return t
+
+    def test_expired_entry_rejoins_candidate_space(self, db, clock):
+        key = _small_key()
+        db.put(key.token, {"impl": "compressed_pallas", "wall_us": 1.0})
+        dispatch.quarantine(key.op, "compressed_pallas", reason="crash")
+        assert dispatch.best_impl(
+            key, param_keys=("values", "idx")).name != "compressed_pallas"
+        clock[0] += 10.0
+        # TTL elapsed: the entry moves to probation and the DB-pinned winner
+        # is eligible (and selected) again
+        assert dispatch.best_impl(
+            key, param_keys=("values", "idx")).name == "compressed_pallas"
+        info = dispatch.quarantine_info(key.op, "compressed_pallas")
+        assert info["probation"] and info["fails"] == 1
+        assert info["reason"] == "crash"
+        # probation entries are no longer listed as quarantined
+        assert dispatch.quarantined(key.op) == frozenset()
+
+    def test_guarded_success_clears_entry(self, db, clock):
+        x, params = _problem()
+        key = dispatch.linear_key_from(x.shape, params["values"].shape)
+        winner = dispatch.best_impl(key, param_keys=("values", "idx"))
+        with fault.fault_scope(f"dispatch.execute@{winner.name}:n=1"):
+            dispatch.run_guarded(key, winner, lambda s: s.apply(params, x),
+                                 param_keys=("values", "idx"))
+        assert winner.name in dispatch.quarantined(key.op)
+        clock[0] += 10.0
+        spec = dispatch.best_impl(key, param_keys=("values", "idx"))
+        assert spec.name == winner.name  # probation re-probe
+        y = dispatch.run_guarded(key, spec, lambda s: s.apply(params, x),
+                                 param_keys=("values", "idx"))
+        # clean probe: fully recovered, the entry is gone
+        assert dispatch.quarantine_info(key.op, winner.name) is None
+        assert dispatch.quarantined(key.op) == frozenset()
+        np.testing.assert_allclose(
+            np.asarray(y), np.asarray(winner.apply(params, x)),
+            rtol=1e-5, atol=1e-5)
+
+    def test_failed_reprobe_requarantines_with_backoff(self, db, clock):
+        x, params = _problem()
+        key = dispatch.linear_key_from(x.shape, params["values"].shape)
+        winner = dispatch.best_impl(key, param_keys=("values", "idx"))
+        with fault.fault_scope(f"dispatch.execute@{winner.name}:n=1"):
+            dispatch.run_guarded(key, winner, lambda s: s.apply(params, x),
+                                 param_keys=("values", "idx"))
+        assert dispatch.quarantine_info(key.op, winner.name)["fails"] == 1
+        clock[0] += 10.0
+        spec = dispatch.best_impl(key, param_keys=("values", "idx"))
+        assert spec.name == winner.name
+        # the re-probe fails too: re-quarantined, TTL doubled (10 -> 20)
+        with fault.fault_scope(f"dispatch.execute@{winner.name}:n=1"):
+            dispatch.run_guarded(key, spec, lambda s: s.apply(params, x),
+                                 param_keys=("values", "idx"))
+        info = dispatch.quarantine_info(key.op, winner.name)
+        assert info["fails"] == 2 and not info["probation"]
+        assert info["until"] == pytest.approx(clock[0] + 20.0)
+        # still degraded after the BASE ttl (backoff in effect) ...
+        clock[0] += 10.0
+        assert dispatch.best_impl(
+            key, param_keys=("values", "idx")).name != winner.name
+        # ... eligible again only after the doubled ttl
+        clock[0] += 10.0
+        assert dispatch.best_impl(
+            key, param_keys=("values", "idx")).name == winner.name
+
+    def test_nonpositive_ttl_disables_expiry(self, db, clock, monkeypatch):
+        monkeypatch.setenv("REPRO_DISPATCH_QUARANTINE_TTL_S", "0")
+        key = _small_key()
+        db.put(key.token, {"impl": "compressed_pallas", "wall_us": 1.0})
+        dispatch.quarantine(key.op, "compressed_pallas")
+        clock[0] += 1e9
+        assert dispatch.best_impl(
+            key, param_keys=("values", "idx")).name != "compressed_pallas"
+        assert "compressed_pallas" in dispatch.quarantined(key.op)
+
+
 class TestProcessLocality:
     def test_quarantine_not_persisted_to_db(self, db):
         """Quarantine is a runtime denylist, not a profiling verdict: the

@@ -113,14 +113,17 @@ class TestTrainer:
         assert np.mean(losses[-5:]) < np.mean(losses[:5]) - 0.05
 
     def test_checkpoint_resume_bit_identical(self, tmp_path):
-        # run 6 steps straight
+        # run to a total budget of 6 steps straight
         tr_a = self._mk(tmp_path / "a", steps=6)
         out_a = tr_a.run()
-        # run 3 + restart + 3
+        # interrupt at 3, restart with the SAME total budget: the restarted
+        # run resumes at step 3 and completes the original 6-step schedule
         tr_b = self._mk(tmp_path / "b", steps=3)
         tr_b.run()
-        tr_c = self._mk(tmp_path / "b", steps=3)
+        tr_c = self._mk(tmp_path / "b", steps=6)
         out_c = tr_c.run()
+        assert out_c["start_step"] == 3
+        assert out_a["final_step"] == out_c["final_step"] == 6
         la = jax.tree_util.tree_leaves(tr_a.params)
         lc = jax.tree_util.tree_leaves(tr_c.params)
         for a, c in zip(la, lc):

@@ -93,11 +93,13 @@ def test_elastic_restart_different_batch(tmp_path):
     t1 = Trainer(cfg, d1, AdamWConfig(lr=1e-3),
                  TrainConfig(steps=4, ckpt_dir=str(tmp_path), ckpt_every=2))
     t1.run()
-    # "scale down" to batch=4 (different topology), resume fine
+    # "scale down" to batch=4 (different topology), resume to a larger
+    # total budget (steps counts from 0, restored progress included)
     d2 = DataConfig(vocab_size=128, batch=4, seq_len=16, seed=1)
     t2 = Trainer(cfg, d2, AdamWConfig(lr=1e-3),
-                 TrainConfig(steps=2, ckpt_dir=str(tmp_path), ckpt_every=10))
+                 TrainConfig(steps=6, ckpt_dir=str(tmp_path), ckpt_every=10))
     step = t2.maybe_restore()
     assert step == 4
     out = t2.run()
-    assert out["final_step"] >= 5
+    assert out["final_step"] == 6
+    assert out["start_step"] == 4

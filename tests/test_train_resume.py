@@ -1,0 +1,121 @@
+"""Crash-safe finetune resume: SparseTrainer's bitwise resume-determinism
+contract, total-budget step accounting, watchdog surfacing, and the
+data-seed pinning that guards the contract."""
+import json
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import jax
+import numpy as np
+import pytest
+
+from repro import fault
+from repro.train import SparseTrainConfig, SparseTrainer
+
+REPO = Path(__file__).resolve().parent.parent
+
+
+def _cfg(ckpt_dir=None, steps=5, **kw):
+    return SparseTrainConfig(
+        steps=steps, batch=2, lr=0.05,
+        ckpt_dir=str(ckpt_dir) if ckpt_dir else None,
+        ckpt_every=1 if ckpt_dir else 0, **kw)
+
+
+def _leaves(tree):
+    return [np.asarray(x) for x in jax.tree_util.tree_leaves(tree)]
+
+
+class TestSparseTrainer:
+    def test_loss_decreases(self):
+        out = SparseTrainer(_cfg(steps=12)).run()
+        losses = [h["loss"] for h in out["history"]]
+        assert np.isfinite(losses).all()
+        assert np.mean(losses[-3:]) < np.mean(losses[:3])
+
+    def test_clean_run_result_shape(self, tmp_path):
+        out = SparseTrainer(_cfg(tmp_path, steps=3)).run()
+        assert out["final_step"] == 3
+        assert out["start_step"] == 0
+        assert out["preempted"] is False
+        assert out["watchdog_fired"] is False
+
+    def test_kill_and_resume_bitwise_identical(self, tmp_path):
+        """The contract: kill at step 3, restart with the same config, and
+        the final params AND momentum are bitwise identical to the
+        uninterrupted run."""
+        ta = SparseTrainer(_cfg(tmp_path / "a"))
+        ta.run()
+
+        tb = SparseTrainer(_cfg(tmp_path / "b"))
+        with fault.fault_scope("train.step:iter=3"):
+            with pytest.raises(fault.InjectedFault):
+                tb.run()
+        tb.ckpt.wait()  # drain the in-flight async save before "restarting"
+        assert tb.ckpt.latest_step() == 3
+
+        tc = SparseTrainer(_cfg(tmp_path / "b"))
+        out = tc.run()
+        assert out["start_step"] == 3 and out["final_step"] == 5
+        for a, c in zip(_leaves(ta.params), _leaves(tc.params)):
+            assert a.dtype == c.dtype and a.tobytes() == c.tobytes()
+        for a, c in zip(_leaves(ta.mom), _leaves(tc.mom)):
+            assert a.tobytes() == c.tobytes()
+
+    def test_total_budget_not_additive(self, tmp_path):
+        """run(steps) trains TO step `steps`, restored progress included — a
+        restart at the budget trains zero additional steps (the off-by-restore
+        accounting bug this pins)."""
+        SparseTrainer(_cfg(tmp_path)).run()
+        t2 = SparseTrainer(_cfg(tmp_path))
+        out = t2.run()
+        assert out["start_step"] == 5
+        assert out["final_step"] == 5
+        assert out["history"] == []
+
+    def test_data_seed_mismatch_refused(self, tmp_path):
+        SparseTrainer(_cfg(tmp_path, steps=2)).run()
+        t2 = SparseTrainer(_cfg(tmp_path, steps=4, data_seed=7))
+        with pytest.raises(ValueError, match="data seed"):
+            t2.run()
+
+    def test_resume_skips_torn_newest_checkpoint(self, tmp_path):
+        """A torn newest checkpoint (writer killed mid-copy) must not poison
+        the restart: resume falls back to the newest valid step and still
+        reaches the budget."""
+        t1 = SparseTrainer(_cfg(tmp_path, steps=3))
+        t1.run()
+        newest = t1.ckpt.dir / "step_00000003"
+        f = newest / "arrays.npz"
+        f.write_bytes(f.read_bytes()[:100])
+        t2 = SparseTrainer(_cfg(tmp_path, steps=5))
+        out = t2.run()
+        assert out["start_step"] == 2  # fell back past the torn step-3 dir
+        assert out["final_step"] == 5
+
+
+class TestWatchdog:
+    def test_fired_flag_surfaced(self, tmp_path):
+        out = SparseTrainer(_cfg(tmp_path, steps=2)).run()
+        assert out["watchdog_fired"] is False
+
+    def test_abort_dumps_trace_and_exits_42(self, tmp_path):
+        """The default abort emits a fault.watchdog instant and dumps the
+        armed trace sink before os._exit(42) — the one artifact that says
+        where a hung run hung must survive the abort."""
+        trace = tmp_path / "wd_trace.json"
+        snippet = (
+            "import time\n"
+            "from repro.train.fault import StepWatchdog\n"
+            "StepWatchdog(timeout_s=0.2).start()\n"
+            "time.sleep(30)\n")
+        env = dict(os.environ,
+                   PYTHONPATH=os.path.join(str(REPO), "src"),
+                   REPRO_OBS="on", REPRO_OBS_TRACE=str(trace))
+        r = subprocess.run([sys.executable, "-c", snippet], env=env,
+                           capture_output=True, text=True, timeout=300)
+        assert r.returncode == 42
+        events = json.loads(trace.read_text())["traceEvents"]
+        assert any(e.get("name") == "fault.watchdog" for e in events)
