@@ -1,10 +1,13 @@
 PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 export PYTHONPATH
 
-.PHONY: test bench bench-quick bench-conv serve-smoke serve-smoke-paged obs-smoke train-smoke chaos-smoke train-chaos-smoke ci
+.PHONY: test lint-contracts bench bench-quick bench-conv serve-smoke serve-smoke-paged obs-smoke train-smoke chaos-smoke train-chaos-smoke ci
 
 test:            ## tier-1 test suite
 	python -m pytest -x -q
+
+lint-contracts:  ## cross-layer contract checker (docs/static-analysis.md)
+	python -m repro.analysis src
 
 bench:           ## full benchmark harness (all paper figures)
 	python -m benchmarks.run
@@ -47,4 +50,4 @@ chaos-smoke:     ## seeded fault-injected paged serve: quarantine-degradation + 
 	&& python -m repro.obs.validate $$t; \
 	rc=$$?; rm -f $$t; exit $$rc
 
-ci: test serve-smoke serve-smoke-paged obs-smoke chaos-smoke train-smoke train-chaos-smoke bench-quick bench-conv  ## what scripts/ci.sh runs
+ci: lint-contracts test serve-smoke serve-smoke-paged obs-smoke chaos-smoke train-smoke train-chaos-smoke bench-quick bench-conv  ## what scripts/ci.sh runs

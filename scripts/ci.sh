@@ -5,6 +5,9 @@ set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
+echo "== contract lints (Pallas/dispatch/registry static checks) =="
+python -m repro.analysis src
+
 echo "== tier-1 tests =="
 python -m pytest -x -q
 

@@ -1,0 +1,11 @@
+"""Cross-layer contract checker: AST lints for the repo's hardware-facing
+conventions (Pallas DMA protocol, dispatch VMEM predicates, fault-site /
+obs-name / env-knob registries).  ``python -m repro.analysis src`` is the
+CI gate; see ``docs/static-analysis.md`` for the rule catalog."""
+from repro.analysis.engine import (Context, Finding, Report, Rule, all_rules,
+                                   find_root, iter_py_files, load_baseline,
+                                   render_json, render_text, run)
+
+__all__ = ["Context", "Finding", "Report", "Rule", "all_rules", "find_root",
+           "iter_py_files", "load_baseline", "render_json", "render_text",
+           "run"]

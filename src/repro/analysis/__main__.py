@@ -1,0 +1,64 @@
+"""CLI: ``python -m repro.analysis [paths...] [--json] [--baseline F]``.
+
+Exit codes: 0 clean, 1 findings (or stale baseline waivers), 2 bad usage.
+The default baseline is the committed ``src/repro/analysis/baseline.json``;
+``--no-baseline`` audits the raw findings.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+from repro.analysis import engine
+
+_DEFAULT_BASELINE = Path(__file__).parent / "baseline.json"
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="cross-layer contract checker (see docs/static-analysis.md)")
+    ap.add_argument("paths", nargs="*", default=None,
+                    help="files/dirs to scan (default: the repo's src/)")
+    ap.add_argument("--json", action="store_true", dest="as_json",
+                    help="machine-readable report (deterministic bytes)")
+    ap.add_argument("--baseline", type=Path, default=None,
+                    help=f"waiver file (default {_DEFAULT_BASELINE})")
+    ap.add_argument("--no-baseline", action="store_true",
+                    help="ignore the committed baseline")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated rule ids to run (e.g. PK101,RC203)")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="print the rule catalog and exit")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for rule in engine.all_rules():
+            print(f"{rule.id}  {rule.title}")
+        return 0
+
+    paths = [Path(p) for p in args.paths] if args.paths else None
+    if paths is None:
+        root = engine.find_root(Path.cwd())
+        if root is None:
+            print("error: no paths given and no repo root found "
+                  "(run from the repo or pass paths)", file=sys.stderr)
+            return 2
+        paths = [root / "src"]
+    for p in paths:
+        if not p.exists():
+            print(f"error: no such path {p}", file=sys.stderr)
+            return 2
+
+    baseline = {} if args.no_baseline else engine.load_baseline(
+        args.baseline if args.baseline is not None else _DEFAULT_BASELINE)
+    only = args.only.split(",") if args.only else None
+    report = engine.run(paths, only=only, baseline=baseline)
+    print(engine.render_json(report) if args.as_json
+          else engine.render_text(report))
+    return 1 if (report.findings or report.unused_waivers) else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

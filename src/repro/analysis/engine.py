@@ -1,0 +1,332 @@
+"""Rule engine for the cross-layer contract checker (``repro.analysis``).
+
+The repo's correctness rests on conventions spanning layers — VMEM
+predicates must agree with the scratch their kernels allocate, fault-site
+literals must exist in ``fault.SITES``, obs event names must match the
+``docs/observability.md`` schema, env reads must go through ``repro.env`` —
+and none of them are enforced by the type system.  This engine makes them
+CI gates: stdlib-``ast`` rules (no new deps) walk every ``*.py`` once,
+return :class:`Finding` records, and ``python -m repro.analysis src`` exits
+non-zero on any finding not waived by the committed baseline.
+
+Design points:
+
+  * **Deterministic output.**  Files are visited in sorted order, findings
+    are sorted on ``(path, line, rule, msg)``, paths are root-relative
+    POSIX, and the JSON reporter sorts keys and carries no timestamps — two
+    runs over the same tree are byte-identical (pinned by a test).
+  * **Stable waiver keys.**  A finding's ``waiver_key`` is
+    ``rule:path:anchor`` where the anchor is a rule-chosen symbol (function
+    name, site literal), never a line number, so a committed waiver
+    survives unrelated edits to the file.
+  * **Two rule scopes.**  ``check_module(ctx, path, tree)`` rules see one
+    parsed file at a time; ``check_project(ctx)`` rules run once per
+    invocation (the dispatch-predicate audit imports the live registry).
+    Project rules only fire when the analyzed tree contains the real
+    ``src/repro`` package — running the engine over a test fixture
+    directory exercises the AST rules without importing jax.
+
+See ``docs/static-analysis.md`` for the rule catalog and waiver policy.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import json
+import re
+from pathlib import Path
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+__all__ = ["Finding", "Rule", "Context", "all_rules", "register",
+           "iter_py_files", "load_baseline", "run", "render_text",
+           "render_json"]
+
+JSON_SCHEMA_VERSION = 1
+
+# Directory names never descended into (caches, VCS metadata, envs).
+_SKIP_DIRS = {"__pycache__", ".git", ".hg", ".cache", ".venv", "node_modules"}
+
+
+@dataclasses.dataclass(frozen=True, order=True)
+class Finding:
+    """One rule violation at one location."""
+
+    path: str  # root-relative POSIX path
+    line: int  # 1-indexed
+    rule: str  # e.g. "PK101"
+    msg: str
+    waiver_key: str  # "rule:path:anchor" — line-free, baseline-stable
+
+    def as_dict(self) -> Dict:
+        return {"rule": self.rule, "path": self.path, "line": self.line,
+                "msg": self.msg, "waiver_key": self.waiver_key}
+
+
+class Rule:
+    """Base class: subclass, set ``id``/``title``, implement one hook."""
+
+    id: str = ""
+    title: str = ""
+
+    def finding(self, path: str, line: int, msg: str,
+                anchor: Optional[str] = None) -> Finding:
+        key = f"{self.id}:{path}:{anchor if anchor is not None else 'module'}"
+        return Finding(path=path, line=line, rule=self.id, msg=msg,
+                       waiver_key=key)
+
+    def check_module(self, ctx: "Context", path: str,
+                     tree: ast.Module) -> Iterable[Finding]:
+        return ()
+
+    def check_project(self, ctx: "Context") -> Iterable[Finding]:
+        return ()
+
+
+_RULES: List[Rule] = []
+
+
+def register(rule_cls):
+    """Class decorator adding a rule (one shared instance) to the engine."""
+    _RULES.append(rule_cls())
+    return rule_cls
+
+
+def all_rules() -> List[Rule]:
+    # rule modules register at import; import them lazily so engine.py has
+    # no import cycle with the rule files
+    from repro.analysis import rules_dispatch  # noqa: F401
+    from repro.analysis import rules_kernels  # noqa: F401
+    from repro.analysis import rules_registry  # noqa: F401
+
+    return sorted(_RULES, key=lambda r: r.id)
+
+
+def find_root(start: Path) -> Optional[Path]:
+    """Walk up from ``start`` to the repo root (the dir holding both
+    ``src/repro`` and ``docs/observability.md``)."""
+    p = start.resolve()
+    if p.is_file():
+        p = p.parent
+    for cand in (p, *p.parents):
+        if (cand / "src" / "repro").is_dir() and \
+                (cand / "docs" / "observability.md").is_file():
+            return cand
+    return None
+
+
+class Context:
+    """Shared state for one engine run: the repo root (when found) and
+    lazily parsed cross-file facts (fault sites, documented obs names,
+    declared env knobs)."""
+
+    def __init__(self, root: Optional[Path], files: Sequence[Path]):
+        self.root = root
+        self.files = list(files)
+        self._fault_sites: Optional[frozenset] = None
+        self._obs_names: Optional[frozenset] = None
+        self._env_names: Optional[frozenset] = None
+        # project rules audit the live registry; only meaningful when the
+        # analyzed tree includes the real package
+        self.has_repo_src = root is not None and any(
+            _is_under(f, root / "src" / "repro") for f in self.files)
+
+    def relpath(self, path: Path) -> str:
+        if self.root is not None:
+            try:
+                return path.resolve().relative_to(self.root).as_posix()
+            except ValueError:
+                pass
+        return path.as_posix()
+
+    # -- cross-file facts ---------------------------------------------------
+
+    def fault_sites(self) -> Optional[frozenset]:
+        """``fault.SITES`` literals, parsed from the AST (no import)."""
+        if self._fault_sites is None:
+            self._fault_sites = _parse_fault_sites(self.root)
+        return self._fault_sites or None
+
+    def documented_obs_names(self) -> Optional[frozenset]:
+        """Dotted event/metric names backticked in docs/observability.md."""
+        if self._obs_names is None:
+            self._obs_names = _parse_documented_names(self.root)
+        return self._obs_names or None
+
+    def declared_env_names(self) -> Optional[frozenset]:
+        """Knob names declared in ``repro.env.KNOBS`` (AST, no import)."""
+        if self._env_names is None:
+            self._env_names = _parse_env_names(self.root)
+        return self._env_names or None
+
+
+def _is_under(path: Path, parent: Path) -> bool:
+    try:
+        path.resolve().relative_to(parent)
+        return True
+    except ValueError:
+        return False
+
+
+def _parse_fault_sites(root: Optional[Path]) -> frozenset:
+    if root is None:
+        return frozenset()
+    src = root / "src" / "repro" / "fault.py"
+    if not src.is_file():
+        return frozenset()
+    tree = ast.parse(src.read_text(), filename=str(src))
+    for node in tree.body:
+        targets = []
+        if isinstance(node, ast.Assign):
+            targets = node.targets
+        elif isinstance(node, ast.AnnAssign) and node.value is not None:
+            targets = [node.target]
+        for t in targets:
+            if isinstance(t, ast.Name) and t.id == "SITES":
+                value = node.value
+                if isinstance(value, (ast.Tuple, ast.List)):
+                    return frozenset(
+                        e.value for e in value.elts
+                        if isinstance(e, ast.Constant)
+                        and isinstance(e.value, str))
+    return frozenset()
+
+
+# dotted lowercase identifiers like `dispatch.resolve` or `bench.<name>.us`
+_DOC_NAME_RE = re.compile(
+    r"`([a-z][a-z0-9_]*(?:\.(?:[a-z0-9_]+|<[a-z0-9_]+>))+)`")
+
+
+def _parse_documented_names(root: Optional[Path]) -> frozenset:
+    if root is None:
+        return frozenset()
+    doc = root / "docs" / "observability.md"
+    if not doc.is_file():
+        return frozenset()
+    return frozenset(_DOC_NAME_RE.findall(doc.read_text()))
+
+
+def _parse_env_names(root: Optional[Path]) -> frozenset:
+    if root is None:
+        return frozenset()
+    src = root / "src" / "repro" / "env.py"
+    if not src.is_file():
+        return frozenset()
+    tree = ast.parse(src.read_text(), filename=str(src))
+    names = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call) and isinstance(node.func, ast.Name) \
+                and node.func.id == "EnvVar" and node.args \
+                and isinstance(node.args[0], ast.Constant):
+            names.add(node.args[0].value)
+    return frozenset(names)
+
+
+# ---------------------------------------------------------------------------
+# File discovery, baseline, run
+# ---------------------------------------------------------------------------
+
+
+def iter_py_files(paths: Sequence[Path]) -> List[Path]:
+    out = []
+    for p in paths:
+        p = Path(p)
+        if p.is_file() and p.suffix == ".py":
+            out.append(p)
+        elif p.is_dir():
+            for f in sorted(p.rglob("*.py")):
+                if not any(part in _SKIP_DIRS for part in f.parts):
+                    out.append(f)
+    return sorted(set(out))
+
+
+def load_baseline(path: Optional[Path]) -> Dict[str, str]:
+    """Committed waivers: ``{"waivers": [{"key": ..., "reason": ...}]}`` ->
+    ``{key: reason}``.  A missing file is an empty baseline."""
+    if path is None or not Path(path).is_file():
+        return {}
+    data = json.loads(Path(path).read_text())
+    waivers = data.get("waivers", []) if isinstance(data, dict) else []
+    out = {}
+    for w in waivers:
+        if isinstance(w, dict) and "key" in w:
+            out[str(w["key"])] = str(w.get("reason", ""))
+    return out
+
+
+@dataclasses.dataclass
+class Report:
+    findings: List[Finding]          # non-waived, sorted
+    waived: List[Finding]            # matched a baseline key
+    unused_waivers: List[str]        # baseline keys that matched nothing
+    files: int
+
+
+def run(paths: Sequence[Path], *, root: Optional[Path] = None,
+        only: Optional[Sequence[str]] = None,
+        baseline: Optional[Dict[str, str]] = None) -> Report:
+    """Run the rules over ``paths`` and split findings against ``baseline``."""
+    files = iter_py_files([Path(p) for p in paths])
+    if root is None and files:
+        root = find_root(files[0])
+    ctx = Context(root, files)
+    rules = all_rules()
+    if only is not None:
+        wanted = set(only)
+        rules = [r for r in rules if r.id in wanted]
+    findings: List[Finding] = []
+    for f in files:
+        rel = ctx.relpath(f)
+        try:
+            tree = ast.parse(f.read_text(), filename=str(f))
+        except SyntaxError as e:
+            findings.append(Finding(
+                path=rel, line=e.lineno or 1, rule="E000",
+                msg=f"syntax error: {e.msg}", waiver_key=f"E000:{rel}:module"))
+            continue
+        for rule in rules:
+            findings.extend(rule.check_module(ctx, rel, tree))
+    if ctx.has_repo_src:
+        for rule in rules:
+            findings.extend(rule.check_project(ctx))
+    findings.sort()
+    baseline = dict(baseline or {})
+    live, waived = [], []
+    matched = set()
+    for f in findings:
+        if f.waiver_key in baseline:
+            matched.add(f.waiver_key)
+            waived.append(f)
+        else:
+            live.append(f)
+    unused = sorted(set(baseline) - matched)
+    return Report(findings=live, waived=waived, unused_waivers=unused,
+                  files=len(files))
+
+
+# ---------------------------------------------------------------------------
+# Reporters
+# ---------------------------------------------------------------------------
+
+
+def render_text(report: Report) -> str:
+    lines = []
+    for f in report.findings:
+        lines.append(f"{f.path}:{f.line}: {f.rule} {f.msg}")
+    for key in report.unused_waivers:
+        lines.append(f"baseline: unused waiver {key}")
+    n = len(report.findings)
+    lines.append(
+        f"{n} finding{'s' if n != 1 else ''} "
+        f"({len(report.waived)} waived) in {report.files} files")
+    return "\n".join(lines)
+
+
+def render_json(report: Report) -> str:
+    payload = {
+        "version": JSON_SCHEMA_VERSION,
+        "files": report.files,
+        "findings": [f.as_dict() for f in report.findings],
+        "waived": [f.as_dict() for f in report.waived],
+        "unused_waivers": list(report.unused_waivers),
+    }
+    return json.dumps(payload, indent=1, sort_keys=True)

@@ -1,0 +1,245 @@
+"""Registry coherence (RC2xx): cross-layer name discipline.
+
+Three registries anchor runtime names — ``fault.SITES`` for fault-injection
+sites, the ``docs/observability.md`` schema tables for obs event/metric
+names, and ``repro.env.KNOBS`` for ``REPRO_*`` env vars.  Code that invents
+a name outside its registry "works" (all three layers tolerate unknown
+names at runtime) and silently falls out of every tool built on the
+registry: an unregistered fault site never fires under a chaos spec typo, an
+undocumented trace event is invisible to schema-driven consumers, an
+undeclared env knob dodges the central default/type discipline.  These
+rules close the loop: every literal must be registered, and since the obs
+names are parsed from the docs themselves, letting the docs drift behind
+the code is the same failure.
+
+All registry facts are parsed from source/docs via AST/regex (no imports),
+so these rules run on fixture trees too.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterable, Optional, Set
+
+from repro.analysis.engine import Context, Rule, register
+
+_FAULT_REGISTRY = "src/repro/fault.py"
+_ENV_REGISTRY = "src/repro/env.py"
+
+# the obs emit surface whose first (literal) argument is a schema name
+_OBS_FNS = {"span", "instant", "counter", "gauge", "histogram"}
+
+
+def _literal_first_arg(call: ast.Call) -> Optional[str]:
+    if call.args and isinstance(call.args[0], ast.Constant) \
+            and isinstance(call.args[0].value, str):
+        return call.args[0].value
+    return None
+
+
+def _dotted_parts(node: ast.expr):
+    """``a.b.c`` -> ["a", "b", "c"]; None for non-name chains."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return list(reversed(parts))
+    return None
+
+
+def spec_sites(spec: str) -> Iterable[str]:
+    """Site names referenced by a fault-plan grammar string
+    (``site[@match]:kind=value`` entries, comma-separated)."""
+    for entry in spec.split(","):
+        entry = entry.strip()
+        if not entry:
+            continue
+        site = entry.partition(":")[0].partition("@")[0].strip()
+        if site:
+            yield site
+
+
+@register
+class UnknownFaultSite(Rule):
+    """RC201: ``maybe_fail``/``fault_scope`` site literals must be members
+    of ``fault.SITES``.  The runtime tolerates unknown sites (a probe that
+    never runs never fires), which is exactly why a typo'd site in a chaos
+    spec or a new probe missing from the registry stays invisible."""
+
+    id = "RC201"
+    title = "fault-site literal not registered in fault.SITES"
+
+    def check_module(self, ctx: Context, path: str, tree: ast.Module):
+        if path == _FAULT_REGISTRY:
+            return  # the registry itself (docstrings, grammar parser)
+        sites = ctx.fault_sites()
+        if sites is None:
+            return
+        for node in ast.walk(tree):
+            if not isinstance(node, ast.Call):
+                continue
+            fn = node.func
+            name = fn.id if isinstance(fn, ast.Name) else (
+                fn.attr if isinstance(fn, ast.Attribute) else None)
+            if name == "maybe_fail":
+                site = _literal_first_arg(node)
+                if site is not None and site not in sites:
+                    yield self.finding(
+                        path, node.lineno,
+                        f"maybe_fail site {site!r} is not in fault.SITES; "
+                        f"register it in {_FAULT_REGISTRY} (and "
+                        f"docs/robustness.md)",
+                        anchor=site)
+            elif name == "fault_scope":
+                spec = _literal_first_arg(node)
+                for site in spec_sites(spec or ""):
+                    if site not in sites:
+                        yield self.finding(
+                            path, node.lineno,
+                            f"fault_scope spec names unknown site {site!r}; "
+                            f"register it in {_FAULT_REGISTRY}",
+                            anchor=site)
+
+
+def _obs_aliases(tree: ast.Module) -> Dict[str, Set[str]]:
+    """Local bindings of the obs emit surface.
+
+    Returns ``{"modules": {...}, "functions": {...}}`` — names bound to the
+    ``repro.obs``/``repro.obs.trace``/``repro.obs.metrics`` modules, and
+    emit functions imported directly (``from repro.obs.trace import span``).
+    """
+    modules: Set[str] = set()
+    functions: Set[str] = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.ImportFrom) and node.module:
+            if node.module == "repro" or node.module.endswith(".obs"):
+                for a in node.names:
+                    if a.name in ("obs", "trace", "metrics"):
+                        modules.add(a.asname or a.name)
+            if node.module.endswith("obs.trace") \
+                    or node.module.endswith("obs.metrics"):
+                for a in node.names:
+                    if a.name in _OBS_FNS:
+                        functions.add(a.asname or a.name)
+        elif isinstance(node, ast.Import):
+            for a in node.names:
+                if a.name in ("repro.obs", "repro.obs.trace",
+                              "repro.obs.metrics"):
+                    modules.add(a.asname or a.name.split(".")[0])
+    return {"modules": modules, "functions": functions}
+
+
+@register
+class UndocumentedObsName(Rule):
+    """RC202: span/instant/counter/gauge/histogram name literals emitted on
+    the global obs surface must appear in the ``docs/observability.md``
+    schema tables.  Names are parsed from the docs, so shipping code without
+    updating the docs fails the same way as inventing a name."""
+
+    id = "RC202"
+    title = "obs event/metric name missing from docs/observability.md"
+
+    def check_module(self, ctx: Context, path: str, tree: ast.Module):
+        documented = ctx.documented_obs_names()
+        if documented is None:
+            return
+        aliases = _obs_aliases(tree)
+        if not aliases["modules"] and not aliases["functions"]:
+            return
+        for node in ast.walk(tree):
+            if not isinstance(node, ast.Call):
+                continue
+            emit = None
+            if isinstance(node.func, ast.Attribute) \
+                    and node.func.attr in _OBS_FNS:
+                parts = _dotted_parts(node.func)
+                # _ot.span(...) / obs.trace.span(...): the receiver chain
+                # must root in an obs-module alias (a method on a private
+                # Registry instance is internal, not schema-bearing)
+                if parts is not None and parts[0] in aliases["modules"]:
+                    emit = node.func.attr
+            elif isinstance(node.func, ast.Name) \
+                    and node.func.id in aliases["functions"]:
+                emit = node.func.id
+            if emit is None:
+                continue
+            name = _literal_first_arg(node)
+            if name is not None and name not in documented:
+                yield self.finding(
+                    path, node.lineno,
+                    f"obs {emit} name {name!r} is not documented in "
+                    f"docs/observability.md; add it to the schema tables",
+                    anchor=name)
+
+
+def _is_environ_get(node: ast.Call) -> bool:
+    """``os.environ.get(...)`` or ``os.getenv(...)``."""
+    parts = _dotted_parts(node.func)
+    return parts in (["os", "environ", "get"], ["os", "getenv"])
+
+
+def _env_aliases(tree: ast.Module) -> Set[str]:
+    """Local names bound to the ``repro.env`` module."""
+    out: Set[str] = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.ImportFrom) and node.module == "repro":
+            for a in node.names:
+                if a.name == "env":
+                    out.add(a.asname or a.name)
+        elif isinstance(node, ast.Import):
+            for a in node.names:
+                if a.name == "repro.env" and a.asname:
+                    out.add(a.asname)
+    return out
+
+
+@register
+class StrayEnvRead(Rule):
+    """RC203: every ``REPRO_*`` read goes through ``repro.env`` — a direct
+    ``os.environ`` read elsewhere re-invents the knob's parse/default
+    inline and dodges the declared registry; an ``env.get`` of an
+    undeclared name bypasses it entirely."""
+
+    id = "RC203"
+    title = "REPRO_* env read outside the repro.env registry"
+
+    def check_module(self, ctx: Context, path: str, tree: ast.Module):
+        if path == _ENV_REGISTRY:
+            return  # the one sanctioned os.environ reader
+        declared = ctx.declared_env_names()
+        env_aliases = _env_aliases(tree)
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Call) and _is_environ_get(node):
+                name = _literal_first_arg(node)
+                if name is not None and name.startswith("REPRO_"):
+                    yield self.finding(
+                        path, node.lineno,
+                        f"direct os.environ read of {name!r}; use "
+                        f"repro.env.get({name!r}) so the knob's "
+                        f"type/default live in one registry",
+                        anchor=name)
+            elif isinstance(node, ast.Subscript) \
+                    and isinstance(node.ctx, ast.Load) \
+                    and _dotted_parts(node.value) == ["os", "environ"] \
+                    and isinstance(node.slice, ast.Constant) \
+                    and isinstance(node.slice.value, str) \
+                    and node.slice.value.startswith("REPRO_"):
+                yield self.finding(
+                    path, node.lineno,
+                    f"direct os.environ[{node.slice.value!r}] read; use "
+                    f"repro.env.get({node.slice.value!r})",
+                    anchor=node.slice.value)
+            elif isinstance(node, ast.Call) and declared is not None \
+                    and isinstance(node.func, ast.Attribute) \
+                    and node.func.attr in ("get", "raw", "spec"):
+                parts = _dotted_parts(node.func)
+                if parts is not None and parts[0] in env_aliases:
+                    name = _literal_first_arg(node)
+                    if name is not None and name not in declared:
+                        yield self.finding(
+                            path, node.lineno,
+                            f"repro.env.{node.func.attr}({name!r}) reads an "
+                            f"undeclared knob; declare it in "
+                            f"repro.env.KNOBS first",
+                            anchor=name)

@@ -110,10 +110,9 @@ _TTL_MAX_DOUBLINGS = 6  # cap the backoff at base * 2**6
 def quarantine_ttl_s() -> float:
     """Base quarantine TTL in seconds (``REPRO_DISPATCH_QUARANTINE_TTL_S``,
     default 30).  <= 0 means entries never expire."""
-    try:
-        return float(os.environ.get("REPRO_DISPATCH_QUARANTINE_TTL_S", "30"))
-    except ValueError:
-        return 30.0
+    from repro import env as _env
+
+    return float(_env.get("REPRO_DISPATCH_QUARANTINE_TTL_S"))
 
 
 def _entry_ttl(fails: int) -> float:
@@ -268,7 +267,9 @@ def set_db(db: Optional[ProfileDB]) -> None:
 
 
 def dispatch_enabled() -> bool:
-    return os.environ.get("REPRO_DISPATCH", "on").lower() not in ("off", "0", "false")
+    from repro import env as _env
+
+    return bool(_env.get("REPRO_DISPATCH"))
 
 
 # ---------------------------------------------------------------------------
@@ -302,7 +303,9 @@ def current_phase() -> str:
 
 
 def _env_force() -> Optional[str]:
-    return os.environ.get("REPRO_DISPATCH_FORCE") or None
+    from repro import env as _env
+
+    return _env.get("REPRO_DISPATCH_FORCE")
 
 
 # Ambient profiling suppression.  ``REPRO_DISPATCH_PROFILE=1`` lets best_impl
@@ -332,7 +335,9 @@ def no_profile_scope():
 def _profile_on_miss() -> bool:
     if _NO_PROFILE:
         return False
-    return os.environ.get("REPRO_DISPATCH_PROFILE", "0").lower() in ("1", "on", "true")
+    from repro import env as _env
+
+    return bool(_env.get("REPRO_DISPATCH_PROFILE"))
 
 
 def _heuristic(specs, key: OpKey) -> ImplSpec:

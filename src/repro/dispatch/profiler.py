@@ -91,7 +91,10 @@ class ProfileDB:
 
     def __init__(self, path: Optional[str] = None, max_entries: int = 1024,
                  autosave: bool = True):
-        self.path = Path(path or os.environ.get("REPRO_DISPATCH_DB", DEFAULT_DB_PATH))
+        from repro import env as _env
+
+        self.path = Path(path or _env.get("REPRO_DISPATCH_DB")
+                         or DEFAULT_DB_PATH)
         self.max_entries = max_entries
         self.autosave = autosave
         self.fingerprint = env_fingerprint()

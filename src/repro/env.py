@@ -1,0 +1,142 @@
+"""Central registry of every ``REPRO_*`` environment knob.
+
+The runtime grew ten env vars across five subsystems (dispatch, obs, fault,
+training watchdog, profiler DB), each read ad hoc with its own parse-and-
+default inline.  This module is the ONE declaration point: every knob is an
+:class:`EnvVar` carrying its name, value kind, default, and one doc line, and
+every runtime read goes through :func:`get` / :func:`raw`.  The static
+analyzer (``repro.analysis`` rule RC203) enforces the funnel — a direct
+``os.environ["REPRO_*"]`` read anywhere else in ``src/`` is a lint failure,
+and so is a :func:`get` of an undeclared name.
+
+Parse semantics are intentionally bit-compatible with the historical inline
+reads (an unparsable int/float falls back to the default instead of raising;
+flag vocabulary is unchanged), so converting a call site is behavior-neutral.
+
+Reads are NOT cached: tests monkeypatch ``os.environ`` and expect the next
+read to see the change, exactly like the inline reads they replaced.
+
+``python -m repro.env`` prints the knob table as markdown — the same table
+embedded in ``docs/static-analysis.md`` (a test pins doc and registry
+together).
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Optional, Tuple
+
+__all__ = ["EnvVar", "KNOBS", "declared", "spec", "get", "raw",
+           "env_table_md"]
+
+# Value kinds and their parse rules (all case-insensitive on flag words):
+#   on-flag   true iff the raw value is one of ``1/on/true``; default False.
+#   off-flag  true unless the raw value is one of ``off/0/false``; default
+#             True (the knob *disables* a subsystem that is on by default).
+#   int/float numeric; unset or unparsable -> default.
+#   str/path  raw string; unset -> default (may be None).
+_FLAG_ON = ("1", "on", "true")
+_FLAG_OFF = ("off", "0", "false")
+
+
+@dataclasses.dataclass(frozen=True)
+class EnvVar:
+    """Declaration of one ``REPRO_*`` knob: name, parse kind, default, doc."""
+
+    name: str
+    kind: str  # "on-flag" | "off-flag" | "int" | "float" | "str" | "path"
+    default: object
+    doc: str
+
+    def raw(self) -> Optional[str]:
+        """The unparsed environment value (None when unset)."""
+        return os.environ.get(self.name)
+
+    def get(self):
+        """The parsed value under this knob's kind rules."""
+        value = self.raw()
+        if self.kind == "on-flag":
+            return value is not None and value.lower() in _FLAG_ON
+        if self.kind == "off-flag":
+            return value is None or value.lower() not in _FLAG_OFF
+        if self.kind == "int":
+            try:
+                return int(value) if value is not None else self.default
+            except ValueError:
+                return self.default
+        if self.kind == "float":
+            try:
+                return float(value) if value is not None else self.default
+            except ValueError:
+                return self.default
+        # str / path: empty string falls through to the default, matching the
+        # historical ``os.environ.get(...) or None`` idiom at the call sites
+        return value if value else self.default
+
+
+KNOBS: Tuple[EnvVar, ...] = (
+    EnvVar("REPRO_DISPATCH", "off-flag", True,
+           "`off`/`0`/`false` disables dispatch (pre-dispatch fixed routing)"),
+    EnvVar("REPRO_DISPATCH_DB", "path", None,
+           "profile-DB file path (default `~/.cache/repro/profile_db.json`)"),
+    EnvVar("REPRO_DISPATCH_FORCE", "str", None,
+           "force one candidate name for every resolution (debug/smoke)"),
+    EnvVar("REPRO_DISPATCH_PROFILE", "on-flag", False,
+           "`1`/`on`/`true` wall-clocks candidates on a profile-DB miss"),
+    EnvVar("REPRO_DISPATCH_QUARANTINE_TTL_S", "float", 30.0,
+           "base quarantine TTL seconds (<= 0: entries never expire)"),
+    EnvVar("REPRO_FAULTS", "str", "",
+           "fault-plan spec `site[@match]:kind=value`, armed at import"),
+    EnvVar("REPRO_FAULTS_SEED", "int", 0,
+           "seed for the fault plan's RNG (`p=` schedules)"),
+    EnvVar("REPRO_OBS", "on-flag", False,
+           "`1`/`on`/`true` enables tracing + the global metric registry"),
+    EnvVar("REPRO_OBS_RING", "int", 65536,
+           "trace ring-buffer capacity in events (oldest drop first)"),
+    EnvVar("REPRO_OBS_TRACE", "path", None,
+           "path: dump the trace ring there at process exit"),
+)
+
+_BY_NAME = {knob.name: knob for knob in KNOBS}
+
+
+def declared() -> Tuple[str, ...]:
+    """All declared knob names (sorted; KNOBS is kept alphabetical)."""
+    return tuple(knob.name for knob in KNOBS)
+
+
+def spec(name: str) -> EnvVar:
+    """The :class:`EnvVar` declaration for ``name`` (KeyError if undeclared)."""
+    try:
+        return _BY_NAME[name]
+    except KeyError:
+        raise KeyError(
+            f"{name!r} is not a declared REPRO_* knob; declare it in "
+            f"repro.env.KNOBS (known: {', '.join(declared())})") from None
+
+
+def get(name: str):
+    """Parsed value of a declared knob (the ONE sanctioned read path)."""
+    return spec(name).get()
+
+
+def raw(name: str) -> Optional[str]:
+    """Unparsed environment value of a declared knob (None when unset)."""
+    return spec(name).raw()
+
+
+def env_table_md() -> str:
+    """The knob table as a markdown table (embedded in docs, pinned by a
+    test so the docs can never drift from the registry)."""
+    lines = ["| Var | Kind | Default | Meaning |", "|---|---|---|---|"]
+    for knob in KNOBS:
+        default = "" if knob.default is None else repr(knob.default)
+        lines.append(
+            f"| `{knob.name}` | {knob.kind} | `{default}` | {knob.doc} |"
+            if default else
+            f"| `{knob.name}` | {knob.kind} | unset | {knob.doc} |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    print(env_table_md())

@@ -25,8 +25,12 @@ Schedule grammar (comma-separated entries)::
 
     site[@match]:kind=value
 
-  ``site``   one of :data:`SITES` (unknown sites are allowed — a probe that
-             never runs simply never fires);
+  ``site``   one of :data:`SITES`.  Unknown sites still parse and arm (the
+             escape hatch tests rely on), but the first probe or plan entry
+             naming one warns once and bumps the ``fault.unknown_site``
+             counter — a typo'd site in a chaos spec is a probe that never
+             fires, which is exactly the silent failure mode chaos testing
+             exists to remove;
   ``match``  optional filter: the entry only applies to probes whose context
              (the ``**ctx`` kwargs of :func:`maybe_fail`) contains the value,
              e.g. ``dispatch.execute@compressed_xla:n=1`` fails only the
@@ -61,9 +65,11 @@ from __future__ import annotations
 
 import contextlib
 import dataclasses
-import os
 import random
-from typing import Dict, List, Optional, Tuple
+import warnings
+from typing import Dict, List, Optional, Set, Tuple
+
+from repro import env as _env
 
 from repro.obs import metrics as _om
 from repro.obs import trace as _ot
@@ -74,9 +80,10 @@ __all__ = [
     "maybe_fail",
 ]
 
-# The named failure boundaries the runtime plants probes at.  Informational:
-# parse_spec accepts any site string (new sites should be added here and to
-# docs/robustness.md, but an entry for a site that never probes is inert).
+# The named failure boundaries the runtime plants probes at.  New sites must
+# be added here and to docs/robustness.md — the repro.analysis RC201 lint
+# checks probe literals against this tuple, and an unregistered site warns
+# once at runtime (see _note_unknown_site).
 SITES: Tuple[str, ...] = (
     "page_pool.alloc",
     "dispatch.execute",
@@ -90,6 +97,25 @@ SITES: Tuple[str, ...] = (
 )
 
 _C_INJECTED = _om.counter("fault.injected")
+_C_UNKNOWN_SITE = _om.counter("fault.unknown_site")
+_WARNED_UNKNOWN: Set[str] = set()
+_SITE_SET = frozenset(SITES)
+
+
+def _note_unknown_site(site: str, where: str) -> None:
+    """Warn once per unknown site (plan entries and armed probes): unknown
+    sites stay allowed — tests probe scratch sites — but silently inert
+    entries are how chaos-spec typos hide."""
+    if site in _SITE_SET or site in _WARNED_UNKNOWN:
+        return
+    _WARNED_UNKNOWN.add(site)
+    _C_UNKNOWN_SITE.inc()
+    _ot.instant("fault.unknown_site", site=site, where=where)
+    warnings.warn(
+        f"fault site {site!r} ({where}) is not registered in fault.SITES; "
+        f"a misspelled site never fires — register new sites in "
+        f"repro/fault.py and docs/robustness.md",
+        RuntimeWarning, stacklevel=3)
 
 
 class InjectedFault(RuntimeError):
@@ -206,6 +232,7 @@ def parse_spec(spec: str, seed: int = 0) -> FaultPlan:
             raise ValueError(f"fault entry {entry!r}: bad value {value!r}")
         if rule.p < 0.0 or rule.p > 1.0:
             raise ValueError(f"fault entry {entry!r}: p outside [0, 1]")
+        _note_unknown_site(rule.site, "plan entry")
         rules.append(rule)
     return FaultPlan(rules, seed=seed, spec=spec)
 
@@ -249,15 +276,11 @@ def uninstall() -> None:
 def configure() -> Optional[FaultPlan]:
     """(Re-)read ``REPRO_FAULTS`` / ``REPRO_FAULTS_SEED`` from the
     environment; arms a plan when the spec is non-empty, disarms otherwise."""
-    spec = os.environ.get("REPRO_FAULTS", "").strip()
+    spec = str(_env.get("REPRO_FAULTS")).strip()
     if not spec:
         uninstall()
         return None
-    try:
-        seed = int(os.environ.get("REPRO_FAULTS_SEED", "0"))
-    except ValueError:
-        seed = 0
-    return install(spec, seed=seed)
+    return install(spec, seed=_env.get("REPRO_FAULTS_SEED"))
 
 
 @contextlib.contextmanager
@@ -276,9 +299,12 @@ def fault_scope(spec, seed: int = 0):
 
 def maybe_fail(site: str, **ctx) -> None:
     """Probe a fault site.  No-op unless a plan is armed; raises
-    :class:`InjectedFault` when the armed plan schedules a fault here."""
+    :class:`InjectedFault` when the armed plan schedules a fault here.
+    An armed probe at a site missing from :data:`SITES` warns once (the
+    off path stays a single bool read)."""
     if not _ENABLED:
         return
+    _note_unknown_site(site, "probe")
     _PLAN.probe(site, ctx)
 
 

@@ -21,7 +21,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels.pltpu_compat import COMPILER_PARAMS as _COMPILER_PARAMS
-from repro.kernels.pltpu_compat import ceil_to
+from repro.kernels.pltpu_compat import ceil_to, dot_f32
 
 NEG = -1e30
 
@@ -42,7 +42,7 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
     v = v_ref[0]  # [bk, D]
     if interpret:  # XLA:CPU has no bf16 dot
         q, k, v = (t.astype(jnp.float32) for t in (q, k, v))
-    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale  # [bq, bk]
+    s = dot_f32(q, k.T, interpret) * scale  # [bq, bk]
 
     i = pl.program_id(1)
     qpos = i * block_q + jax.lax.iota(jnp.int32, block_q)[:, None]
@@ -57,7 +57,7 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
     p = jnp.exp(s - m_new)  # [bq, bk] f32
     alpha = jnp.exp(m_prev - m_new)  # [bq, 1]
     l_ref[...] = alpha * l_ref[...] + p.sum(axis=-1, keepdims=True)
-    pv = jnp.dot(p.astype(v.dtype), v, preferred_element_type=jnp.float32)
+    pv = dot_f32(p.astype(v.dtype), v, interpret)
     acc_ref[...] = alpha * acc_ref[...] + pv
     m_ref[...] = m_new
 

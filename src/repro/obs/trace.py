@@ -54,14 +54,15 @@ def now_us() -> float:
 
 
 def _env_enabled() -> bool:
-    return os.environ.get("REPRO_OBS", "off").lower() in ("1", "on", "true")
+    from repro import env as _env
+
+    return bool(_env.get("REPRO_OBS"))
 
 
 def _env_ring() -> int:
-    try:
-        return max(int(os.environ.get("REPRO_OBS_RING", DEFAULT_RING)), 1)
-    except ValueError:
-        return DEFAULT_RING
+    from repro import env as _env
+
+    return max(int(_env.get("REPRO_OBS_RING")), 1)
 
 
 # module-global fast path: instrumentation points read one bool
@@ -264,7 +265,9 @@ def dump_chrome_trace(path, metadata: Optional[Dict] = None) -> int:
 
 
 def _atexit_dump() -> None:
-    path = os.environ.get("REPRO_OBS_TRACE")
+    from repro import env as _env
+
+    path = _env.get("REPRO_OBS_TRACE")
     if path and _RING.snapshot():
         try:
             dump_chrome_trace(path)

@@ -63,10 +63,11 @@ class StepWatchdog:
         self.fired = False
 
     def _default_abort(self):
+        from repro import env as _env
         from repro.obs import trace as _ot
 
         _ot.instant("fault.watchdog", timeout_s=self.timeout_s)
-        path = os.environ.get("REPRO_OBS_TRACE")
+        path = _env.get("REPRO_OBS_TRACE")
         if path:
             try:
                 _ot.dump_chrome_trace(path)

@@ -1,0 +1,420 @@
+"""Cross-layer contract checker (`repro.analysis`): per-rule good/bad
+fixtures, waiver/baseline round-trips, reporter determinism, the zero-
+findings gate over the real tree, and seeded regressions proving each rule
+family turns its bug class into a non-zero exit."""
+import dataclasses
+import json
+import subprocess
+import sys
+import textwrap
+import time
+import warnings
+from pathlib import Path
+
+import pytest
+
+from repro import env
+from repro.analysis import engine
+from repro.analysis.__main__ import main as analysis_main
+
+REPO = Path(__file__).resolve().parent.parent
+BASELINE = REPO / "src" / "repro" / "analysis" / "baseline.json"
+
+
+# ---------------------------------------------------------------------------
+# Fixture mini-repo: enough root markers for find_root + the cross-file
+# facts (fault sites, documented obs names, declared env knobs) WITHOUT
+# src/repro/dispatch/registry.py, so the DP project rules skip and nothing
+# imports jax.
+# ---------------------------------------------------------------------------
+
+
+def make_repo(tmp_path: Path, files: dict) -> Path:
+    root = tmp_path / "fixrepo"
+    (root / "docs").mkdir(parents=True)
+    (root / "docs" / "observability.md").write_text(textwrap.dedent("""\
+        # schema
+        | `demo.event` | instant | x |
+        Counters: `demo.count`.
+    """))
+    (root / "src" / "repro").mkdir(parents=True)
+    (root / "src" / "repro" / "fault.py").write_text(
+        'SITES = ("demo.site", "other.site")\n')
+    (root / "src" / "repro" / "env.py").write_text(textwrap.dedent("""\
+        KNOBS = (
+            EnvVar("REPRO_DEMO", "int", 0, "demo knob"),
+        )
+    """))
+    for rel, src in files.items():
+        p = root / rel
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(textwrap.dedent(src))
+    return root
+
+
+def run_rules(root: Path, only):
+    return engine.run([root / "src"], only=only)
+
+
+def rule_ids(report):
+    return sorted({f.rule for f in report.findings})
+
+
+# ---------------------------------------------------------------------------
+# PK1xx: pallas kernel lints
+# ---------------------------------------------------------------------------
+
+GOOD_ROTATED = """\
+    from repro.kernels.pltpu_compat import make_async_copy, double_buffer_rotate
+
+    def _kernel(x_ref, o_ref, buf, sem):
+        def dma(slot, idx):
+            return make_async_copy(x_ref.at[idx], buf.at[slot], sem.at[slot])
+        double_buffer_rotate(dma, 0, 4)
+"""
+
+BAD_UNWAITED = """\
+    from repro.kernels.pltpu_compat import make_async_copy
+
+    def _kernel(x_ref, o_ref, buf, sem):
+        cp = make_async_copy(x_ref.at[0], buf.at[0], sem)
+        cp.start()
+"""
+
+BAD_MANUAL_PAIR = """\
+    from repro.kernels.pltpu_compat import make_async_copy
+
+    def _kernel(x_ref, o_ref, buf, sem):
+        cp = make_async_copy(x_ref.at[0], buf.at[0], sem)
+        cp.start()
+        cp.wait()
+"""
+
+
+class TestKernelRules:
+    def test_pk101_unpaired_async_copy(self, tmp_path):
+        root = make_repo(tmp_path, {"src/repro/kernels/k.py": BAD_UNWAITED})
+        report = run_rules(root, only=["PK101"])
+        assert rule_ids(report) == ["PK101"]
+        (f,) = report.findings
+        assert "never waited" in f.msg
+        assert f.waiver_key.endswith(":_kernel")  # line-free anchor
+
+    def test_pk101_rotate_protocol_is_clean(self, tmp_path):
+        root = make_repo(tmp_path, {"src/repro/kernels/k.py": GOOD_ROTATED})
+        assert run_rules(root, only=["PK101", "PK102"]).findings == []
+
+    def test_pk102_manual_start_wait_pair(self, tmp_path):
+        root = make_repo(tmp_path, {"src/repro/kernels/k.py": BAD_MANUAL_PAIR})
+        assert rule_ids(run_rules(root, only=["PK101", "PK102"])) == ["PK102"]
+
+    def test_pk103_any_operand_direct_index(self, tmp_path):
+        bad = """\
+            def _kernel(x_ref, o_ref):
+                o_ref[...] = x_ref[0]
+
+            def call(x):
+                return pallas_call(
+                    _kernel,
+                    in_specs=[BlockSpec(memory_space=ANY)],
+                    out_specs=BlockSpec((8, 8), lambda i: (0, 0)),
+                )(x)
+        """
+        root = make_repo(tmp_path, {"src/repro/kernels/k.py": bad})
+        (f,) = run_rules(root, only=["PK103"]).findings
+        assert f.rule == "PK103" and "x_ref" in f.msg
+        # .at[...] windows are the sanctioned access and stay clean
+        good = bad.replace("x_ref[0]", "x_ref.at[0]")
+        root2 = make_repo(tmp_path / "g", {"src/repro/kernels/k.py": good})
+        assert run_rules(root2, only=["PK103"]).findings == []
+
+    def test_pk104_bare_dot_in_kernel(self, tmp_path):
+        bad = """\
+            def _kernel(x_ref, o_ref):
+                o_ref[...] = jnp.dot(x_ref[...], x_ref[...])
+
+            def call(x):
+                return pallas_call(
+                    _kernel,
+                    in_specs=[BlockSpec((8, 8), lambda i: (0, 0))],
+                    out_specs=BlockSpec((8, 8), lambda i: (0, 0)),
+                )(x)
+        """
+        root = make_repo(tmp_path, {"src/repro/kernels/k.py": bad})
+        (f,) = run_rules(root, only=["PK104"]).findings
+        assert "dot_f32" in f.msg
+        good = bad.replace("jnp.dot", "dot_f32_helper")  # any Name call
+        root2 = make_repo(tmp_path / "g", {"src/repro/kernels/k.py": good})
+        assert run_rules(root2, only=["PK104"]).findings == []
+
+    def test_pk105_single_buffered_scratch(self, tmp_path):
+        src = """\
+            from functools import partial
+            from repro.kernels.pltpu_compat import make_async_copy, double_buffer_rotate
+
+            def _kernel(x_ref, o_ref, buf, sem):
+                def dma(slot, idx):
+                    return make_async_copy(x_ref.at[idx], buf.at[slot], sem.at[slot])
+                double_buffer_rotate(dma, 0, 4)
+
+            def call(x):
+                return pallas_call(
+                    partial(_kernel),
+                    in_specs=[BlockSpec(memory_space=ANY)],
+                    out_specs=BlockSpec((8, 8), lambda i: (0, 0)),
+                    scratch_shapes=[VMEM((1, 8, 128), jnp.float32), SEM],
+                )(x)
+        """
+        root = make_repo(tmp_path, {"src/repro/kernels/k.py": src})
+        (f,) = run_rules(root, only=["PK105"]).findings
+        assert f.rule == "PK105" and "'buf'" in f.msg
+        good = src.replace("VMEM((1, 8, 128)", "VMEM((2, 8, 128)")
+        root2 = make_repo(tmp_path / "g", {"src/repro/kernels/k.py": good})
+        assert run_rules(root2, only=["PK105"]).findings == []
+        # symbolic double buffers (2 * hb, ...) count too
+        sym = src.replace("VMEM((1, 8, 128)", "VMEM((2 * hb, 8, 128)")
+        root3 = make_repo(tmp_path / "s", {"src/repro/kernels/k.py": sym})
+        assert run_rules(root3, only=["PK105"]).findings == []
+
+
+# ---------------------------------------------------------------------------
+# RC2xx: registry coherence
+# ---------------------------------------------------------------------------
+
+
+class TestRegistryRules:
+    def test_rc201_unknown_fault_site(self, tmp_path):
+        src = """\
+            from repro import fault
+
+            def f():
+                fault.maybe_fail("demo.site", step=1)      # registered
+                fault.maybe_fail("bogus.site", step=2)     # not in SITES
+                with fault.fault_scope("other.site:n=1, bogus.scope:p=0.5"):
+                    pass
+        """
+        root = make_repo(tmp_path, {"src/repro/mod.py": src})
+        report = run_rules(root, only=["RC201"])
+        assert [f.waiver_key.rsplit(":", 1)[1] for f in report.findings] == \
+            ["bogus.site", "bogus.scope"]  # finding order: by line
+
+    def test_rc202_undocumented_obs_name(self, tmp_path):
+        src = """\
+            from repro.obs import trace as _ot
+            from repro.obs import metrics as _om
+            from repro.obs.trace import instant
+
+            _C = _om.counter("demo.count")                 # documented
+            _BAD = _om.counter("demo.rogue_counter")       # not in docs
+
+            def f():
+                _ot.instant("demo.event", x=1)             # documented
+                instant("demo.rogue_event")                # direct import, bad
+                private.counter("demo.also_rogue")         # private registry: exempt
+        """
+        root = make_repo(tmp_path, {"src/repro/mod.py": src})
+        report = run_rules(root, only=["RC202"])
+        names = sorted(f.waiver_key.rsplit(":", 1)[1] for f in report.findings)
+        assert names == ["demo.rogue_counter", "demo.rogue_event"]
+
+    def test_rc203_stray_env_reads(self, tmp_path):
+        src = """\
+            import os
+            from repro import env as _env
+
+            def f():
+                a = _env.get("REPRO_DEMO")                  # declared: ok
+                b = os.environ.get("REPRO_STRAY")           # direct read: bad
+                c = os.environ["REPRO_SUBSCRIPT"]           # direct read: bad
+                d = os.getenv("REPRO_GETENV")               # direct read: bad
+                e = _env.get("REPRO_UNDECLARED")            # undeclared: bad
+                f = os.environ.get("OTHER_PREFIX")          # out of scope
+                return a, b, c, d, e, f
+        """
+        root = make_repo(tmp_path, {"src/repro/mod.py": src})
+        report = run_rules(root, only=["RC203"])
+        names = sorted(f.waiver_key.rsplit(":", 1)[1] for f in report.findings)
+        assert names == ["REPRO_GETENV", "REPRO_STRAY", "REPRO_SUBSCRIPT",
+                         "REPRO_UNDECLARED"]
+
+    def test_e000_syntax_error_is_a_finding(self, tmp_path):
+        root = make_repo(tmp_path, {"src/repro/mod.py": "def f(:\n"})
+        report = run_rules(root, only=["RC203"])  # E000 fires regardless
+        assert rule_ids(report) == ["E000"]
+
+
+# ---------------------------------------------------------------------------
+# Engine mechanics: baseline/waivers, reporters, determinism
+# ---------------------------------------------------------------------------
+
+
+class TestEngine:
+    def test_waiver_roundtrip_and_unused_waiver(self, tmp_path):
+        root = make_repo(tmp_path, {"src/repro/kernels/k.py": BAD_UNWAITED})
+        report = run_rules(root, only=["PK101"])
+        (f,) = report.findings
+        waived = engine.run([root / "src"], only=["PK101"],
+                            baseline={f.waiver_key: "known debt"})
+        assert waived.findings == [] and len(waived.waived) == 1
+        stale = engine.run([root / "src"], only=["PK101"],
+                           baseline={f.waiver_key: "x",
+                                     "PK101:gone.py:fn": "stale"})
+        assert stale.unused_waivers == ["PK101:gone.py:fn"]
+
+    def test_cli_exit_codes(self, tmp_path, capsys):
+        root = make_repo(tmp_path, {"src/repro/kernels/k.py": BAD_UNWAITED})
+        assert analysis_main([str(root / "src"), "--no-baseline",
+                              "--only", "PK101"]) == 1
+        assert analysis_main([str(root / "src"), "--no-baseline",
+                              "--only", "PK102"]) == 0
+        assert analysis_main(["--list-rules"]) == 0
+        listed = capsys.readouterr().out
+        for rid in ("PK101", "PK102", "PK103", "PK104", "PK105",
+                    "DP301", "DP302", "RC201", "RC202", "RC203"):
+            assert rid in listed
+        assert analysis_main([str(root / "nope")]) == 2
+
+    def test_json_reporter_schema(self, tmp_path):
+        root = make_repo(tmp_path, {"src/repro/kernels/k.py": BAD_UNWAITED})
+        report = run_rules(root, only=["PK101"])
+        payload = json.loads(engine.render_json(report))
+        assert payload["version"] == engine.JSON_SCHEMA_VERSION
+        assert set(payload) == {"version", "files", "findings", "waived",
+                                "unused_waivers"}
+        (f,) = payload["findings"]
+        assert set(f) == {"rule", "path", "line", "msg", "waiver_key"}
+        assert f["path"].startswith("src/")  # root-relative POSIX
+
+    def test_cross_process_determinism(self):
+        def one_run():
+            return subprocess.run(
+                [sys.executable, "-m", "repro.analysis", "src", "--json"],
+                cwd=REPO, capture_output=True,
+                env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"})
+        a, b = one_run(), one_run()
+        assert a.returncode == 0, a.stdout.decode() + a.stderr.decode()
+        assert a.stdout == b.stdout  # byte-identical reports
+
+    def test_committed_baseline_matches_shipped_tree(self):
+        # the tier-1 gate: the real src/ under the committed baseline is clean
+        report = engine.run([REPO / "src"],
+                            baseline=engine.load_baseline(BASELINE))
+        assert report.findings == [], engine.render_text(report)
+        assert report.unused_waivers == []
+        assert report.files > 50
+
+    def test_analyzer_runtime_budget(self):
+        start = time.monotonic()
+        engine.run([REPO / "src"], baseline=engine.load_baseline(BASELINE))
+        assert time.monotonic() - start < 10.0
+
+
+# ---------------------------------------------------------------------------
+# Seeded regressions: each rule family catches its bug class end-to-end
+# ---------------------------------------------------------------------------
+
+
+class TestSeededRegressions:
+    def test_dp301_catches_dtype_undercounting_predicate(self):
+        from repro.dispatch import registry as R
+
+        base = next(s for s in R.REGISTRY.candidates("linear")
+                    if s.backend == "pallas"
+                    and s.name.startswith("compressed_pallas"))
+        # the PR 3 bug, reintroduced: a predicate that assumes bf16 operands
+        # under-counts every f32 key's footprint 2x
+        bf16_only = dataclasses.replace(
+            base, name=base.name.partition("@")[0] + "@seededbug",
+            vmem_bytes=lambda key, _vm=base.vmem_bytes: _vm(
+                dataclasses.replace(key, dtype="bf16")))
+        R.REGISTRY.register(bf16_only)
+        try:
+            report = engine.run([REPO / "src"], only=["DP301"])
+            assert any("@seededbug" in f.msg and "f32" in f.msg
+                       for f in report.findings), \
+                engine.render_text(report)
+        finally:
+            R.REGISTRY._impls["linear"].pop(bf16_only.name, None)
+            R.REGISTRY.generation += 1
+        # and the live registry itself is clean
+        assert engine.run([REPO / "src"], only=["DP301", "DP302"]).findings \
+            == []
+
+    def test_pk101_catches_unwaited_copy_via_cli(self, tmp_path):
+        root = make_repo(tmp_path, {"src/repro/kernels/k.py": BAD_UNWAITED})
+        assert analysis_main([str(root / "src"), "--no-baseline"]) == 1
+
+    def test_rc201_catches_unregistered_site_via_cli(self, tmp_path):
+        root = make_repo(tmp_path, {
+            "src/repro/mod.py":
+            "from repro import fault\nfault.maybe_fail('new.unregistered')\n"})
+        assert analysis_main([str(root / "src"), "--no-baseline"]) == 1
+
+    def test_rc203_catches_stray_env_read_via_cli(self, tmp_path):
+        root = make_repo(tmp_path, {
+            "src/repro/mod.py":
+            "import os\nx = os.environ.get('REPRO_NEW_THING')\n"})
+        assert analysis_main([str(root / "src"), "--no-baseline"]) == 1
+
+
+# ---------------------------------------------------------------------------
+# Satellites: the env registry and the fault unknown-site warning
+# ---------------------------------------------------------------------------
+
+
+class TestEnvRegistry:
+    def test_parse_kinds(self, monkeypatch):
+        monkeypatch.delenv("REPRO_OBS", raising=False)
+        assert env.get("REPRO_OBS") is False
+        monkeypatch.setenv("REPRO_OBS", "on")
+        assert env.get("REPRO_OBS") is True
+        monkeypatch.setenv("REPRO_DISPATCH", "off")
+        assert env.get("REPRO_DISPATCH") is False
+        monkeypatch.delenv("REPRO_DISPATCH", raising=False)
+        assert env.get("REPRO_DISPATCH") is True
+        monkeypatch.setenv("REPRO_OBS_RING", "not-an-int")
+        assert env.get("REPRO_OBS_RING") == 65536  # unparsable -> default
+        monkeypatch.setenv("REPRO_OBS_TRACE", "")
+        assert env.get("REPRO_OBS_TRACE") is None  # empty string -> default
+        monkeypatch.setenv("REPRO_FAULTS_SEED", "7")
+        assert env.get("REPRO_FAULTS_SEED") == 7
+
+    def test_undeclared_knob_raises(self):
+        with pytest.raises(KeyError, match="REPRO_NOT_A_KNOB"):
+            env.get("REPRO_NOT_A_KNOB")
+
+    def test_doc_table_pinned_to_registry(self):
+        doc = (REPO / "docs" / "static-analysis.md").read_text()
+        assert env.env_table_md() in doc, \
+            "docs/static-analysis.md env table drifted; re-run " \
+            "`python -m repro.env` and paste between the env-table markers"
+
+    def test_knobs_sorted_and_prefixed(self):
+        names = env.declared()
+        assert list(names) == sorted(names)
+        assert all(n.startswith("REPRO_") for n in names)
+
+
+class TestUnknownSiteWarning:
+    def test_warns_once_and_counts(self):
+        from repro import fault
+
+        site = "test_analysis.never_registered"
+        with warnings.catch_warnings(record=True) as caught:
+            warnings.simplefilter("always")
+            with fault.fault_scope(f"{site}:n=1"):
+                pass
+            with fault.fault_scope(f"{site}:n=1"):  # second arm: silent
+                pass
+        ours = [w for w in caught if site in str(w.message)]
+        assert len(ours) == 1
+        assert issubclass(ours[0].category, RuntimeWarning)
+
+    def test_registered_sites_stay_silent(self):
+        from repro import fault
+
+        with warnings.catch_warnings(record=True) as caught:
+            warnings.simplefilter("always")
+            with fault.fault_scope("scheduler.iter:n=1"):
+                pass
+        assert [w for w in caught if "fault site" in str(w.message)] == []
